@@ -1,0 +1,33 @@
+"""Beyond-paper ablation: HALP overlap-zone width vs. inference time.
+
+The paper fixes the host zone at 4 rows; this sweep shows the trade-off the
+scheduler navigates: wider zones shift compute to the host (serialising in the
+multi-task regime) while narrower zones leave less boundary slack.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import GTX_1080TI, AGX_XAVIER, Link, simulate_halp, vgg16_geom
+
+NET = vgg16_geom()
+
+
+def run() -> dict:
+    out = {}
+    print("\n== ablation: overlap-zone width (rows) vs HALP time, 40 Gbps ==")
+    print(f"{'rows':>5s} {'1 task 1080TI (ms)':>20s} {'4 tasks 1080TI (ms)':>20s} {'4 tasks Xavier (ms)':>20s}")
+    for w in (2, 4, 6, 8, 12, 16, 24):
+        t1 = simulate_halp(NET, GTX_1080TI, Link(40e9), overlap_rows=w)["total"]
+        t4 = simulate_halp(NET, GTX_1080TI, Link(40e9), n_tasks=4, overlap_rows=w)["total"]
+        t4x = simulate_halp(NET, AGX_XAVIER, Link(40e9), n_tasks=4, overlap_rows=w)["total"]
+        print(f"{w:5d} {t1*1e3:20.3f} {t4*1e3:20.3f} {t4x*1e3:20.3f}")
+        print(f"ablation_overlap_{w},{t4*1e6:.1f},{4/t4:.0f}")
+        out[w] = (t1, t4)
+    best = min(out, key=lambda w: out[w][1])
+    print(f"best 4-task width: {best} rows (paper uses 4)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

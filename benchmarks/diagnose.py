@@ -1,0 +1,91 @@
+"""Diagnose a cell's HLO: top individual ops by (trip-multiplied) bytes.
+
+    PYTHONPATH=src python benchmarks/diagnose.py qwen3-4b train_4k pod16x16 [variant]
+"""
+import re
+import sys
+from collections import Counter
+from pathlib import Path
+
+import zstandard as zstd
+
+sys.path.insert(0, "src")
+
+from repro.launch.hlo_cost import (
+    _FUSED_ELEMENTWISE,
+    _SKIP_BYTES,
+    _operands,
+    _parse,
+    _shape_elems_bytes,
+)
+
+RESULTS = Path(__file__).parent / "dryrun_results"
+
+
+def diagnose(arch, cell, mesh="pod16x16", variant=None, top=25):
+    suffix = f"__{variant}" if variant and variant != "base" else ""
+    f = RESULTS / "hlo" / f"{arch}__{cell}__{mesh}{suffix}.hlo.zst"
+    text = zstd.ZstdDecompressor().decompress(f.read_bytes(), max_output_size=2**31).decode()
+    comps, entry, types = _parse(text)
+
+    # computation -> multiplier (product of enclosing while trip counts)
+    mult = {entry: 1.0}
+    fused = set()
+    changed = True
+    order = list(comps)
+    while changed:
+        changed = False
+        for name, comp in comps.items():
+            if name not in mult:
+                continue
+            m0 = mult[name]
+            for op in comp.ops:
+                if op.opcode == "while":
+                    t = re.search(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)', op.rest)
+                    trip = int(t.group(1)) if t else 1
+                    for key, mm in (("body", trip), ("condition", trip + 1)):
+                        r = re.search(key + r"=(%[\w.\-]+)", op.rest)
+                        if r and mult.get(r.group(1)) != m0 * mm:
+                            mult[r.group(1)] = m0 * mm
+                            changed = True
+                elif op.opcode == "fusion":
+                    r = re.search(r"calls=(%[\w.\-]+)", op.rest)
+                    if r:
+                        fused.add(r.group(1))
+                elif op.opcode in ("call", "conditional"):
+                    for r in re.finditer(r"(?:to_apply|calls)=(%[\w.\-]+)", op.rest):
+                        if mult.get(r.group(1)) != m0:
+                            mult[r.group(1)] = m0
+                            changed = True
+
+    rows = []
+    for name, comp in comps.items():
+        m0 = mult.get(name)
+        if m0 is None or name in fused:
+            continue
+        for op in comp.ops:
+            if op.opcode in _SKIP_BYTES or op.opcode in _FUSED_ELEMENTWISE:
+                continue
+            if op.opcode.endswith("-done"):
+                continue
+            _, res_b = _shape_elems_bytes(op.result_type)
+            if op.opcode in ("dynamic-slice", "gather"):
+                nb = 2 * res_b
+            elif op.opcode == "dynamic-update-slice":
+                ops_ = _operands(op.rest)
+                nb = 2 * (_shape_elems_bytes(types.get(ops_[1], ""))[1] if len(ops_) > 1 else res_b)
+            else:
+                nb = res_b + sum(_shape_elems_bytes(types.get(o, ""))[1] for o in _operands(op.rest))
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            rows.append((nb * m0, m0, op.opcode, op.result_type[:60],
+                         (meta.group(1) if meta else "")[:90]))
+    rows.sort(key=lambda r: -r[0])
+    print(f"== top {top} ops by bytes: {arch}/{cell}/{mesh}{suffix} ==")
+    for nb, m0, opc, ty, mn in rows[:top]:
+        print(f"{nb/1e9:12.1f} GB x{m0:6.0f} {opc:22s} {ty:60s} {mn}")
+    total = sum(r[0] for r in rows)
+    print(f"total bytes: {total/1e9:.1f} GB")
+
+
+if __name__ == "__main__":
+    diagnose(*sys.argv[1:])

@@ -1,0 +1,39 @@
+"""§Perf helper: diff roofline terms between a baseline record and a variant.
+
+    PYTHONPATH=src python benchmarks/perf_compare.py deepseek-v3-671b train_4k opt
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.roofline import RESULTS, terms
+
+
+def load(arch, cell, mesh, variant=None):
+    suffix = f"__{variant}" if variant and variant != "base" else ""
+    f = RESULTS / f"{arch}__{cell}__{mesh}{suffix}.json"
+    return json.loads(f.read_text())
+
+
+def compare(arch, cell, variant, mesh="pod16x16"):
+    base = load(arch, cell, mesh)
+    var = load(arch, cell, mesh, variant)
+    tb, tv = terms(base), terms(var)
+    print(f"== {arch}/{cell}/{mesh}: base -> {variant} ==")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        b, v = tb[k], tv[k]
+        delta = (v - b) / b * 100 if b else float("inf")
+        print(f"  {k:14s} {b:10.4f} -> {v:10.4f}   ({delta:+7.1f}%)")
+    print(f"  bottleneck     {tb['bottleneck']:>10s} -> {tv['bottleneck']:>10s}")
+    print(f"  roofline_frac  {tb['roofline_frac']:10.4f} -> {tv['roofline_frac']:10.4f}")
+    bound_b = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+    bound_v = max(tv["compute_s"], tv["memory_s"], tv["collective_s"])
+    print(f"  bound time     {bound_b:10.4f} -> {bound_v:10.4f}  ({bound_b/bound_v:6.2f}x faster)")
+    return tb, tv
+
+
+if __name__ == "__main__":
+    compare(*sys.argv[1:4])

@@ -1,0 +1,48 @@
+"""Recompute the hlo_cost fields of every dry-run JSON from the archived
+compressed HLO -- lets the cost model iterate without recompiling.
+
+    PYTHONPATH=src python benchmarks/reanalyze.py
+"""
+import json
+import sys
+from pathlib import Path
+
+import zstandard as zstd
+
+sys.path.insert(0, "src")
+
+from repro.launch.hlo_cost import analyze_hlo
+
+RESULTS = Path(__file__).parent / "dryrun_results"
+
+
+def main():
+    dctx = zstd.ZstdDecompressor()
+    n = 0
+    for jf in sorted(RESULTS.glob("*.json")):
+        if jf.name.startswith("_"):
+            continue
+        rec = json.loads(jf.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hf = RESULTS / "hlo" / (jf.stem + ".hlo.zst")
+        if not hf.exists():
+            print(f"no HLO archive for {jf.name}; skipping")
+            continue
+        text = dctx.decompress(hf.read_bytes(), max_output_size=2**31).decode()
+        hc = analyze_hlo(text)
+        rec["hlo_cost"] = {
+            "flops": hc.flops,
+            "bytes_accessed": hc.bytes_accessed,
+            "collective_bytes": hc.collective_bytes,
+            "per_collective": hc.per_collective,
+            "collective_counts": hc.collective_counts,
+            "unknown_trip_whiles": hc.unknown_trip_whiles,
+        }
+        jf.write_text(json.dumps(rec, indent=2))
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / ICI_link_bw
+(The SPMD-partitioned module is per device, so dividing per-device quantities
+by per-chip peaks equals the global/(chips x peak) form for balanced shards.)
+
+MODEL_FLOPS uses 6*N_active*tokens (LM train), 2*N_active*tokens (inference),
+and a measured single-device batch-1 forward for vision/diffusion (scaled by
+batch, x3 for training, x steps for samplers).  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = Path(__file__).parent / "dryrun_results"
+FWD_CACHE = Path(__file__).parent / "dryrun_results" / "_fwd_flops.json"
+
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+def active_params(arch_name: str) -> float:
+    """Parameters touched per token (dense count; MoE counts top_k/E of experts
+    + shared; embeddings excluded per the standard 6ND convention)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get
+    from repro.configs.steps import abstract_params
+
+    arch = get(arch_name)
+    p = abstract_params(arch, arch.cfg, jnp.bfloat16)
+    cfg = arch.cfg
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(p)[0]
+    import numpy as np
+
+    for path, leaf in flat:
+        ps = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
+        n = float(np.prod(leaf.shape))
+        if "embed" in ps and "label" not in ps:
+            continue
+        if "experts" in ps:
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return total
+
+
+def _fwd_flops_b1(arch_name: str, cell_name: str) -> float:
+    """Single-device, batch-1 forward HLO FLOPs for vision/diffusion cells."""
+    cache = json.loads(FWD_CACHE.read_text()) if FWD_CACHE.exists() else {}
+    key = f"{arch_name}__{cell_name}"
+    if key in cache:
+        return cache[key]
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get
+    from repro.configs.steps import abstract_params, _adapt_vision_cfg, _diff_cfg
+
+    arch = get(arch_name)
+    cell = arch.cells[cell_name]
+    res = cell.meta.get("img_res", getattr(arch.cfg, "img_res", None))
+    if arch.family == "vision":
+        cfg = _adapt_vision_cfg(arch, arch.cfg, res)
+        x = jax.ShapeDtypeStruct((1, res, res, 3), jnp.bfloat16)
+        fn = lambda p, x: arch.module.apply(p, cfg, x)
+        args = (abstract_params(arch, cfg, jnp.bfloat16), x)
+    else:  # diffusion: one denoiser forward at the cell resolution
+        cfg = _diff_cfg(arch, arch.cfg, res)
+        lr = cfg.latent_res
+        lat = jax.ShapeDtypeStruct((1, lr, lr, cfg.latent_ch), jnp.bfloat16)
+        t = jax.ShapeDtypeStruct((1,), jnp.int32)
+        if arch.name.startswith("dit"):
+            cond = jax.ShapeDtypeStruct((1,), jnp.int32)
+        else:
+            cond = jax.ShapeDtypeStruct((1, cfg.ctx_len, cfg.ctx_dim), jnp.bfloat16)
+        fn = lambda p, l, tt, c: arch.module.apply(p, cfg, l, tt, c)
+        args = (abstract_params(arch, cfg, jnp.bfloat16), lat, t, cond)
+    lowered = jax.jit(fn).lower(*args)
+    # trip-corrected accounting (these forwards scan their layer stacks too)
+    from repro.launch.hlo_cost import analyze_hlo
+
+    flops = analyze_hlo(lowered.compile().as_text()).flops
+    cache[key] = flops
+    FWD_CACHE.parent.mkdir(exist_ok=True, parents=True)
+    FWD_CACHE.write_text(json.dumps(cache, indent=2))
+    return flops
+
+
+def model_flops(rec: dict) -> float:
+    """Global useful FLOPs for the cell's step."""
+    from repro.configs import get
+
+    arch_name, cell_name = rec["arch"], rec["cell"]
+    arch = get(arch_name)
+    cell = arch.cells[cell_name]
+    m = cell.meta
+    if arch.family == "lm":
+        n_act = active_params(arch_name)
+        if cell.kind == "train":
+            toks = m["global_batch"] * m["seq_len"]
+            return 6.0 * n_act * toks
+        if cell.kind == "prefill":
+            return 2.0 * n_act * m["global_batch"] * m["seq_len"]
+        if cell.kind == "decode":
+            return 2.0 * n_act * m["global_batch"]
+    fwd1 = _fwd_flops_b1(arch_name, cell_name)
+    b = m.get("batch", 1)
+    if cell.kind == "train":
+        return 3.0 * fwd1 * b
+    if cell.kind == "gen":
+        return fwd1 * b * m.get("steps", 1)
+    return fwd1 * b
+
+
+def terms(rec: dict) -> dict:
+    chips = CHIPS[rec["mesh"]]
+    if "hlo_cost" in rec:  # while-trip-corrected accounting (preferred)
+        f = rec["hlo_cost"]["flops"]
+        by = rec["hlo_cost"]["bytes_accessed"]
+        cb = rec["hlo_cost"]["collective_bytes"]
+    else:  # raw XLA cost_analysis (scan bodies counted once -- under-reports)
+        f = rec["cost"]["flops"]
+        by = rec["cost"]["bytes_accessed"]
+        cb = rec["collectives"]["total"]
+    t_c = f / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_n = cb / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    hlo_global = f * chips
+    # roofline fraction: time the *useful* model FLOPs would take at peak,
+    # over the binding term.  1.0 = the step is pure useful compute at peak.
+    t_useful = mf / chips / PEAK_FLOPS
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "bottleneck": dom[0],
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_frac": t_useful / max(t_c, t_m, t_n, 1e-30),
+    }
+
+
+def load_all(mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        if f.name.startswith("_"):
+            continue
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def table(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for rec in load_all(mesh):
+        if rec["status"] != "ok":
+            rows.append({**rec, "note": rec.get("skip_reason", rec.get("error", ""))[:60]})
+            continue
+        rows.append({**rec, **terms(rec)})
+    return rows
+
+
+def print_table(mesh: str = "pod16x16"):
+    print(f"\n== Roofline terms per cell ({mesh}; v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI) ==")
+    hdr = f"{'arch':22s} {'cell':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'bound':>10s} {'useful':>7s} {'roofline':>8s}"
+    print(hdr)
+    for r in table(mesh):
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['cell']:12s} {'-- ' + r['status'] + ': ' + r.get('note', '')}")
+            continue
+        print(
+            f"{r['arch']:22s} {r['cell']:12s} {r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['bottleneck']:>10s} {r['useful_ratio']:7.2f} "
+            f"{r['roofline_frac']:8.2f}"
+        )
+        print(f"roofline_{r['arch']}_{r['cell']}_{mesh},{r['compute_s']*1e6:.0f},{r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        if list(RESULTS.glob(f"*__{mesh}.json")):
+            print_table(mesh)

@@ -1,0 +1,78 @@
+"""Quickstart: the paper's full pipeline on VGG-16 in one script.
+
+1. receptive-field arithmetic (paper eqs. 1-4),
+2. HALP partition plan (eqs. 5-9) + inter-ES message sizes (eqs. 10-14),
+3. losslessness: the partitioned forward equals the single-device forward,
+4. latency: HALP vs MoDNN vs standalone on the paper's platforms (eqs. 15-23),
+5. service reliability under a time-variant channel (Table III model).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    GTX_1080TI,
+    AGX_XAVIER,
+    Link,
+    OffloadChannel,
+    plan_halp,
+    rf_chain,
+    service_reliability,
+    simulate_halp,
+    simulate_modnn,
+    standalone_time,
+    vgg16_geom,
+)
+from repro.models import vgg
+from repro.spatial import run_plan
+
+# -- 1. receptive fields ------------------------------------------------------
+net = vgg16_geom()
+states = rf_chain(net.in_rows, net.layers)
+print("== receptive-field chain (VGG-16) ==")
+for g, st in list(zip(net.layers, states))[:4] + [(net.layers[-1], states[-1])]:
+    print(f"  {g.name:10s} out={st.out:4d} jump={st.jump:3d} rf={st.rf:4d}")
+
+# -- 2. the HALP plan ---------------------------------------------------------
+plan = plan_halp(net, overlap_rows=4)
+p0 = plan.parts[0]
+print("\n== HALP partition, layer conv1_1 ==")
+for es in plan.es_names:
+    seg = p0.out[es]
+    print(f"  {es}: output rows {seg.lo}..{seg.hi} ({seg.rows} rows)")
+print(f"  host->e1 message after conv2_1: {plan.message_bytes(3, 'e0', 'e1'):,.0f} bytes")
+
+# -- 3. losslessness ----------------------------------------------------------
+cfg = vgg.VGGConfig(img_res=64, width_mult=0.125, num_classes=10)
+params = vgg.init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64, 3))
+ref = vgg.features(params, cfg, x)
+dist = run_plan(plan_halp(cfg.geom(), overlap_rows=4), params["features"], vgg.apply_layer, x)
+np.testing.assert_allclose(np.asarray(dist), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("\n== losslessness: distributed == single-device forward  OK ==")
+
+# -- 4. latency ---------------------------------------------------------------
+print("\n== inference time (ms), 4 tasks per batch ==")
+for plat in (GTX_1080TI, AGX_XAVIER):
+    t_pre = standalone_time(net, plat)
+    for rate in (40e9, 100e9):
+        halp = simulate_halp(net, plat, Link(rate), n_tasks=4)["total"]
+        modnn = simulate_modnn(net, plat, Link(rate), 9)["total"]
+        print(
+            f"  {plat.name:18s} @{rate/1e9:3.0f}G: standalone {t_pre*1e3:6.2f}  "
+            f"HALP {halp*1e3:6.2f} ({4/halp:5.0f} fps)  MoDNN {modnn*1e3:6.2f}"
+        )
+
+# -- 5. reliability -----------------------------------------------------------
+print("\n== service reliability, 30 FPS deadline, Xavier ==")
+ch = OffloadChannel(rate_bps=40e6, sigma_s=5e-3)
+for name, t_inf in (("standalone", 32.43e-3), ("HALP", 17.77e-3)):
+    r = service_reliability(ch, t_inf, 4.0 / 30.0)
+    print(f"  {name:10s}: {r:.6f}")
+print("\nquickstart complete.")

@@ -1,0 +1,65 @@
+"""Fault-tolerant training demo: train a reduced ViT for a few hundred steps
+on synthetic data, inject two node failures, and show checkpoint/restart
+producing the same final parameters as an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_fault_tolerant.py --steps 120
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.runtime.fault import FaultConfig, InjectedFault
+from repro.runtime.train import make_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="vit-l16")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d_ref, tempfile.TemporaryDirectory() as d_ft:
+        print(f"== reference run ({args.steps} steps, no faults) ==")
+        t_ref, s_ref = make_trainer(
+            args.arch, "cls_224", fault_cfg=FaultConfig(ckpt_dir=d_ref, ckpt_every=20)
+        )
+        s_ref, st_ref = t_ref.run(s_ref, args.steps, resume=False)
+        print(f"loss: {st_ref.losses[0]:.4f} -> {st_ref.losses[-1]:.4f} "
+              f"(ema step {st_ref.ema_step_s*1e3:.0f}ms)")
+
+        print("\n== chaos run: kill the job at steps 37 and 83 ==")
+        boom = {"left": [37, 83]}
+
+        def chaos(i):
+            if boom["left"] and i == boom["left"][0]:
+                boom["left"].pop(0)
+                print(f"  !! injected node failure at step {i}")
+                raise InjectedFault(f"node failure at step {i}")
+
+        t_ft, s_ft = make_trainer(
+            args.arch, "cls_224",
+            fault_cfg=FaultConfig(ckpt_dir=d_ft, ckpt_every=20),
+            fault_hook=chaos,
+        )
+        s_ft, st = t_ft.run(s_ft, args.steps, resume=False)
+        print(f"failures={st.failures} restores={st.restores} "
+              f"loss: {st.losses[0]:.4f} -> {st.losses[-1]:.4f}")
+
+        ok = all(
+            np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        rtol=1e-5, atol=1e-6)
+            for a, b in zip(
+                jax.tree_util.tree_leaves(s_ref[0]), jax.tree_util.tree_leaves(s_ft[0])
+            )
+        )
+        print(f"\nfinal params identical to uninterrupted run: {ok}")
+        assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,344 @@
+"""Step builders: (arch, cell) -> jit-able function + abstract inputs.
+
+The same builder feeds three consumers:
+* smoke tests  -- reduced configs, real arrays, one step on CPU,
+* the dry-run  -- full configs, ShapeDtypeStructs, lower+compile on the
+  production mesh (no allocation),
+* the drivers  -- examples/ and launch/train.py / launch/serve.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import convnext, dit, efficientnet, swin, transformer_lm as lm, unet, vit
+from ..optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from .base import Arch, Cell
+
+__all__ = ["StepBundle", "build", "abstract_params", "abstract_state"]
+
+
+@dataclass
+class StepBundle:
+    """Everything needed to jit/lower one (arch, cell)."""
+
+    fn: Callable  # fn(state_or_params, *inputs)
+    state: Any  # abstract pytree (params or (params, opt, step))
+    inputs: dict[str, Any]  # name -> ShapeDtypeStruct (ordered)
+    donate_state: bool  # whether arg 0 should be donated
+    kind: str
+
+    @property
+    def input_list(self):
+        return list(self.inputs.values())
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_params(arch: Arch, cfg, dtype):
+    init = partial(arch.module.init, cfg=cfg, dtype=dtype)
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+def abstract_state(arch: Arch, cfg, dtype, opt_cfg: AdamWConfig):
+    params = abstract_params(arch, cfg, dtype)
+    opt = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params)
+    return (params, opt, _sds((), jnp.int32))
+
+
+def _opt_cfg_for(arch: Arch) -> AdamWConfig:
+    # bf16 moments for the very large configs (fits 512 x 16 GB; DESIGN.md).
+    if arch.name.startswith("deepseek"):
+        return AdamWConfig(moment_dtype=jnp.bfloat16)
+    return AdamWConfig()
+
+
+def _adapt_vision_cfg(arch: Arch, cfg, img_res: int):
+    cfg = dataclasses.replace(cfg, img_res=img_res)
+    if arch.family == "vision" and hasattr(cfg, "window") and img_res == 384:
+        # Swin finetunes at 384 with window 12 (arXiv:2103.14030 §4.1)
+        cfg = dataclasses.replace(cfg, window=12)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_train(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    opt_cfg = _opt_cfg_for(arch)
+
+    def step(state, tokens, labels):
+        params, opt, n = state
+        (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+            params, cfg, tokens, labels
+        )
+        params, opt = adamw_update(grads, opt, params, opt_cfg, warmup_cosine(n))
+        return (params, opt, n + 1), metrics
+
+    b, s = cell.meta["global_batch"], cell.meta["seq_len"]
+    return StepBundle(
+        fn=step,
+        state=abstract_state(arch, cfg, dtype, opt_cfg),
+        inputs={"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)},
+        donate_state=True,
+        kind="train",
+    )
+
+
+def _lm_prefill(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    def step(params, tokens):
+        logits, _ = lm.forward(params, cfg, tokens)
+        return logits
+
+    b, s = cell.meta["global_batch"], cell.meta["seq_len"]
+    return StepBundle(
+        fn=step,
+        state=abstract_params(arch, cfg, dtype),
+        inputs={"tokens": _sds((b, s), jnp.int32)},
+        donate_state=False,
+        kind="prefill",
+    )
+
+
+def _lm_decode(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    b, s = cell.meta["global_batch"], cell.meta["seq_len"]
+
+    def step(params, cache, tokens, index):
+        return lm.decode_step(params, cfg, cache, tokens, index)
+
+    cache = jax.eval_shape(partial(lm.init_cache, cfg, b, s, dtype=dtype))
+    return StepBundle(
+        fn=step,
+        state=abstract_params(arch, cfg, dtype),
+        inputs={
+            "cache": cache,
+            "tokens": _sds((b, 1), jnp.int32),
+            "index": _sds((), jnp.int32),
+        },
+        donate_state=False,
+        kind="decode",
+    )
+
+
+# ---------------------------------------------------------------------------
+# vision family
+# ---------------------------------------------------------------------------
+
+
+def _vision_train(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    cfg = _adapt_vision_cfg(arch, cfg, cell.meta["img_res"])
+    opt_cfg = _opt_cfg_for(arch)
+
+    def step(state, images, labels):
+        params, opt, n = state
+        (loss, aux), grads = jax.value_and_grad(arch.module.loss_fn, has_aux=True)(
+            params, cfg, images, labels
+        )
+        params, opt = adamw_update(grads, opt, params, opt_cfg, warmup_cosine(n))
+        return (params, opt, n + 1), {"loss": loss}
+
+    b, r = cell.meta["batch"], cell.meta["img_res"]
+    return StepBundle(
+        fn=step,
+        state=abstract_state(arch, cfg, dtype, opt_cfg),
+        inputs={
+            "images": _sds((b, r, r, 3), dtype),
+            "labels": _sds((b,), jnp.int32),
+        },
+        donate_state=True,
+        kind="train",
+    )
+
+
+def _vision_serve(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    cfg = _adapt_vision_cfg(arch, cfg, cell.meta["img_res"])
+
+    def step(params, images):
+        return arch.module.apply(params, cfg, images)
+
+    b, r = cell.meta["batch"], cell.meta["img_res"]
+    return StepBundle(
+        fn=step,
+        state=abstract_params(arch, cfg, dtype),
+        inputs={"images": _sds((b, r, r, 3), dtype)},
+        donate_state=False,
+        kind="serve",
+    )
+
+
+# ---------------------------------------------------------------------------
+# diffusion family
+# ---------------------------------------------------------------------------
+
+
+def _diff_cfg(arch: Arch, cfg, img_res: int):
+    return dataclasses.replace(cfg, img_res=img_res)
+
+
+def _diffusion_cond_specs(arch: Arch, cfg, b, dtype):
+    if arch.module is dit:
+        return {"cond": _sds((b,), jnp.int32)}
+    return {"cond": _sds((b, cfg.ctx_len, cfg.ctx_dim), dtype)}
+
+
+def _diffusion_apply(arch: Arch, cfg, params, lat, t, cond):
+    if arch.module is dit:
+        return dit.apply(params, cfg, lat, t, cond)[..., : cfg.latent_ch]
+    return unet.apply(params, cfg, lat, t, cond)
+
+
+def _diffusion_train(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    cfg = _diff_cfg(arch, cfg, cell.meta["img_res"])
+    opt_cfg = _opt_cfg_for(arch)
+    n_steps = cell.meta.get("steps", 1000)
+
+    def loss_fn(params, latents, t, cond, noise):
+        # cosine-ish alpha schedule; eps-prediction MSE (DDPM objective)
+        a = jnp.cos(0.5 * jnp.pi * (t.astype(jnp.float32) / n_steps)) ** 2
+        a = a[:, None, None, None].astype(latents.dtype)
+        x_t = jnp.sqrt(a) * latents + jnp.sqrt(1.0 - a) * noise
+        pred = _diffusion_apply(arch, cfg, params, x_t, t, cond)
+        return jnp.mean(jnp.square(pred.astype(jnp.float32) - noise.astype(jnp.float32)))
+
+    def step(state, latents, t, cond, noise):
+        params, opt, n = state
+        loss, grads = jax.value_and_grad(loss_fn)(params, latents, t, cond, noise)
+        params, opt = adamw_update(grads, opt, params, opt_cfg, warmup_cosine(n))
+        return (params, opt, n + 1), {"loss": loss}
+
+    b = cell.meta["batch"]
+    lr = cfg.latent_res
+    lat = _sds((b, lr, lr, cfg.latent_ch), dtype)
+    cond = _diffusion_cond_specs(arch, cfg, b, dtype)
+    inputs = {"latents": lat, "t": _sds((b,), jnp.int32), **cond, "noise": lat}
+    return StepBundle(
+        fn=step,
+        state=abstract_state(arch, cfg, dtype, opt_cfg),
+        inputs=inputs,
+        donate_state=True,
+        kind="train",
+    )
+
+
+def _diffusion_gen(arch: Arch, cfg, cell: Cell, dtype) -> StepBundle:
+    from ..parallel.variants import get_variant
+
+    cfg = _diff_cfg(arch, cfg, cell.meta["img_res"])
+    if get_variant().diffusion_spatial2d and hasattr(cfg, "attn_f32"):
+        # serving variant: SD-style low-precision softmax (§Perf iteration 3)
+        cfg = dataclasses.replace(cfg, attn_f32=False)
+    n_steps = cell.meta["steps"]
+    n_train = 1000
+
+    def sample(params, latents, cond):
+        """DDIM sampler: ``n_steps`` scanned forwards of the backbone."""
+        ts = jnp.linspace(n_train - 1, 1, n_steps).astype(jnp.int32)
+
+        def alpha(t):
+            return jnp.cos(0.5 * jnp.pi * (t.astype(jnp.float32) / n_train)) ** 2
+
+        def body(lat, tpair):
+            t, t_next = tpair
+            tb = jnp.full((lat.shape[0],), t, jnp.int32)
+            eps = _diffusion_apply(arch, cfg, params, lat, tb, cond)
+            a, an = alpha(t), alpha(t_next)
+            x0 = (lat - jnp.sqrt(1 - a) * eps) / jnp.sqrt(a)
+            lat = jnp.sqrt(an) * x0 + jnp.sqrt(1 - an) * eps
+            return lat.astype(latents.dtype), None
+
+        pairs = (ts, jnp.concatenate([ts[1:], jnp.zeros((1,), jnp.int32)]))
+        lat, _ = jax.lax.scan(body, latents, pairs)
+        return lat
+
+    b = cell.meta["batch"]
+    lr = cfg.latent_res
+    cond = _diffusion_cond_specs(arch, cfg, b, dtype)
+    inputs = {"latents": _sds((b, lr, lr, cfg.latent_ch), dtype), **cond}
+    return StepBundle(
+        fn=sample,
+        state=abstract_params(arch, cfg, dtype),
+        inputs=inputs,
+        donate_state=False,
+        kind="gen",
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {
+    ("lm", "train"): _lm_train,
+    ("lm", "prefill"): _lm_prefill,
+    ("lm", "decode"): _lm_decode,
+    ("vision", "train"): _vision_train,
+    ("vision", "serve"): _vision_serve,
+    ("diffusion", "train"): _diffusion_train,
+    ("diffusion", "gen"): _diffusion_gen,
+}
+
+
+def build(arch: Arch, cell_name: str, *, smoke: bool = False, dtype=None) -> StepBundle:
+    cell = arch.cells[cell_name]
+    if cell.skip:
+        raise ValueError(f"{arch.name}/{cell_name} is skipped: {cell.skip}")
+    cfg = arch.smoke_cfg if smoke else arch.cfg
+    if smoke:
+        cell = _shrink(cell)
+    if dtype is None:
+        dtype = jnp.float32 if smoke else jnp.bfloat16
+    return _BUILDERS[(arch.family, cell.kind)](arch, cfg, cell, dtype)
+
+
+def realize(arch: Arch, bundle: StepBundle, key, *, smoke: bool = True):
+    """Materialise real (state, inputs) for a bundle -- used by smoke tests and
+    the CPU example drivers.  Random inputs; zeros caches."""
+    cfg = arch.smoke_cfg if smoke else arch.cfg
+    dtype = jax.tree_util.tree_leaves(bundle.state)[0].dtype
+    k_init, k_in = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    params = arch.module.init(k_init, cfg, dtype=dtype)
+    if bundle.kind == "train":
+        opt = adamw_init(params, _opt_cfg_for(arch))
+        state = (params, opt, jnp.zeros((), jnp.int32))
+    else:
+        state = params
+    inputs = {}
+    for name, spec in bundle.inputs.items():
+        k_in, k = jax.random.split(k_in)
+        inputs[name] = _random_like(spec, k)
+    return state, inputs
+
+
+def _random_like(spec, key):
+    if isinstance(spec, dict) or not hasattr(spec, "dtype"):
+        # pytree (e.g. a KV cache): zeros
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec
+        )
+    if jnp.issubdtype(spec.dtype, jnp.integer):
+        if spec.shape == ():
+            return jnp.zeros((), spec.dtype)
+        # stay below every smoke config's num_classes / vocab
+        return jax.random.randint(key, spec.shape, 0, 8).astype(spec.dtype)
+    return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype)
+
+
+def _shrink(cell: Cell) -> Cell:
+    m = dict(cell.meta)
+    if "seq_len" in m:
+        m["seq_len"] = 128 if cell.kind == "decode" else 64
+    for k, v in (("global_batch", 2), ("batch", 2), ("steps", 2)):
+        if k in m:
+            m[k] = min(m[k], v)
+    if "img_res" in m:
+        m["img_res"] = 64
+    return Cell(cell.name, cell.kind, m, None)

@@ -1,0 +1,22 @@
+"""vgg16 -- the paper's own evaluation model (not part of the assigned pool;
+used by the HALP reproduction benchmarks and examples)."""
+from ..models import vgg
+from ..models.vgg import VGGConfig
+from .base import Arch, Cell, register
+
+FULL = VGGConfig()
+SMOKE = VGGConfig(img_res=64, width_mult=0.125, num_classes=10)
+
+ARCH = register(
+    Arch(
+        name="vgg16",
+        family="convnet",
+        cfg=FULL,
+        smoke_cfg=SMOKE,
+        cells={
+            "halp_224": Cell("halp_224", "serve", {"img_res": 224, "batch": 1}),
+        },
+        module=vgg,
+        notes="paper model; served through the HALP spatial engine",
+    )
+)

@@ -1,0 +1,27 @@
+"""The paper's contribution: receptive-field-exact partitioning (rf, partition),
+HALP / MoDNN scheduling (schedule), exact event simulation (simulator), and the
+service-reliability model (reliability)."""
+from .nets import ConvNetGeom, vgg16_geom
+from .partition import HALPPlan, Segment, plan_even, plan_halp, split_rows
+from .reliability import OffloadChannel, rate_fluctuation, service_reliability
+from .rf import (
+    LayerGeom,
+    RFState,
+    input_range_exact,
+    input_range_paper,
+    out_size,
+    propagate_range,
+    rf_chain,
+)
+from .schedule import (
+    AGX_XAVIER,
+    GTX_1080TI,
+    TPU_V5E,
+    Link,
+    Platform,
+    halp_closed_form,
+    modnn_time,
+    speedup_ratio,
+    standalone_time,
+)
+from .simulator import Sim, enhanced_modnn_delay, simulate_halp, simulate_modnn

@@ -1,0 +1,226 @@
+"""Segment-based task partitioning (paper §III, eqs. 5-9) and the HALP plan.
+
+The host ES partitions every layer's *output rows* into three contiguous
+segments (paper Fig. 2 / eqs. 6-7):
+
+    rows 1..a           -> secondary e1
+    rows a+1..a+w       -> host e0     (the "overlapping zone", w ~ 4 rows)
+    rows a+w+1..O       -> secondary e2
+
+and derives each ES's required *input rows* from the receptive-field arithmetic
+(eqs. 8-9 / exact interval algebra).  All inter-ES messages follow from range
+intersections, so the plan is lossless by construction.  The same machinery
+generalises to K collaborating pairs (paper §IV.B) and to N-way even splits for
+the TPU spatial-parallel engine (``repro.spatial``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .nets import ConvNetGeom, DTYPE_BYTES
+from .rf import input_range_exact
+
+__all__ = [
+    "Segment",
+    "LayerPartition",
+    "HALPPlan",
+    "split_rows",
+    "plan_halp",
+    "plan_even",
+]
+
+E1, E0, E2 = "e1", "e0", "e2"  # paper's ES names; e0 is the host
+
+
+@dataclass(frozen=True)
+class Segment:
+    """1-indexed inclusive row range; empty iff lo > hi."""
+
+    lo: int
+    hi: int
+
+    @property
+    def rows(self) -> int:
+        return max(0, self.hi - self.lo + 1)
+
+    def intersect(self, other: "Segment") -> "Segment":
+        return Segment(max(self.lo, other.lo), min(self.hi, other.hi))
+
+    def __bool__(self) -> bool:  # truthy iff non-empty
+        return self.rows > 0
+
+
+EMPTY = Segment(1, 0)
+
+
+@dataclass(frozen=True)
+class LayerPartition:
+    """Partition of one layer: output segments and required input ranges per ES."""
+
+    index: int
+    out: dict[str, Segment]
+    inp: dict[str, Segment]  # exact input rows each ES needs (eqs. 8-9, exact form)
+
+
+@dataclass(frozen=True)
+class HALPPlan:
+    net: ConvNetGeom
+    parts: tuple[LayerPartition, ...]
+    es_names: tuple[str, ...]  # order along rows: (e1, e0, e2) or N-way
+
+    def owner_rows(self, layer: int, es: str) -> Segment:
+        return self.parts[layer].out[es]
+
+    def message(self, layer: int, src: str, dst: str) -> Segment:
+        """Rows of layer ``layer``'s *output* that src owns and dst needs as
+        input for layer ``layer + 1`` (or for the head merge if last layer)."""
+        if layer + 1 >= len(self.parts):
+            # final layer: everything the secondaries own is sent to the host
+            # to be merged as the FL input (paper eqs. 13-14, g_i = g_N case).
+            if dst == E0 and src != E0:
+                return self.parts[layer].out[src]
+            return EMPTY
+        need = self.parts[layer + 1].inp[dst]
+        own = self.parts[layer].out[src]
+        got = self.parts[layer].out[dst]
+        inter = need.intersect(own)
+        if not inter or src == dst:
+            return EMPTY
+        # dst already owns `got`; only rows outside it must travel.
+        pieces = []
+        if inter.lo < got.lo:
+            pieces.append(Segment(inter.lo, min(inter.hi, got.lo - 1)))
+        if inter.hi > got.hi:
+            pieces.append(Segment(max(inter.lo, got.hi + 1), inter.hi))
+        if not pieces:
+            return EMPTY
+        if len(pieces) == 1:
+            return pieces[0]
+        # src on both sides of dst cannot happen with contiguous ordered segments
+        raise AssertionError("non-contiguous message; segment ordering violated")
+
+    def message_bytes(self, layer: int, src: str, dst: str) -> float:
+        seg = self.message(layer, src, dst)
+        if not seg:
+            return 0.0
+        g = self.net.layers[layer]
+        width = self.net.sizes()[layer + 1]
+        return DTYPE_BYTES * seg.rows * width * g.c_out
+
+
+def split_rows(total: int, ratios: Sequence[float]) -> list[Segment]:
+    """Paper eqs. (6)-(7) generalised: contiguous segments by cumulative ratio.
+
+    Segments exactly cover 1..total; rounding via cumulative floor keeps every
+    segment within +-1 row of its exact ratio share.
+    """
+    if abs(sum(ratios) - 1.0) > 1e-9:
+        raise ValueError(f"ratios must sum to 1, got {sum(ratios)}")
+    bounds = [0]
+    acc = 0.0
+    for r in ratios[:-1]:
+        acc += r
+        bounds.append(int(round(acc * total)))
+    bounds.append(total)
+    return [Segment(lo + 1, hi) for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+
+def _align_down(x: int, align: int) -> int:
+    return (x // align) * align
+
+
+def plan_halp(
+    net: ConvNetGeom,
+    overlap_rows: int = 4,
+    es_names: tuple[str, str, str] = (E1, E0, E2),
+) -> HALPPlan:
+    """Build the HALP partition for a conv net (paper §IV.A).
+
+    Per layer the host zone is ``overlap_rows`` output rows centred between two
+    near-equal secondary segments.  Boundaries are kept even in front of stride-2
+    layers so pooling never crosses a segment boundary (paper: "the host ES does
+    not need to send the output of the current CL ... for the pooling layer").
+    The plan asserts that secondaries never need each other's rows -- all
+    boundary traffic flows through the host, as the scheme requires.
+    """
+    lo_name, host, hi_name = es_names
+    sizes = net.sizes()
+    parts: list[LayerPartition] = []
+    for i, g in enumerate(net.layers):
+        o = sizes[i + 1]
+        if g.kind == "pool":
+            # pools inherit the previous layer's boundaries (divided by stride);
+            # choose the host zone as the pooled image of the previous host zone.
+            prev = parts[-1].out
+            out = {
+                lo_name: Segment(1, prev[lo_name].hi // g.s),
+                host: Segment(prev[lo_name].hi // g.s + 1, prev[host].hi // g.s),
+                hi_name: Segment(prev[host].hi // g.s + 1, o),
+            }
+        else:
+            w = min(overlap_rows, max(1, o - 2))
+            a = (o - w) // 2
+            # Align both host-zone boundaries to the strides of the pooling
+            # layers that follow *before the next conv* (where the partition is
+            # re-balanced anyway), so pools never cross a segment boundary.
+            align = 1
+            for h in net.layers[i + 1 :]:
+                if h.kind != "pool":
+                    break
+                align *= h.s
+            while align > max(1, o // 4):
+                align //= 2
+            if align > 1:
+                a = max(align, _align_down(a, align))
+                w = ((w + align - 1) // align) * align
+                w = min(w, max(1, o - a - 1))
+            out = {
+                lo_name: Segment(1, a),
+                host: Segment(a + 1, a + w),
+                hi_name: Segment(a + w + 1, o),
+            }
+        inp = {
+            es: (
+                Segment(*input_range_exact(seg.lo, seg.hi, g.k, g.s, g.p, sizes[i]))
+                if seg
+                else EMPTY
+            )
+            for es, seg in out.items()
+        }
+        parts.append(LayerPartition(index=i, out=out, inp=inp))
+    plan = HALPPlan(net=net, parts=tuple(parts), es_names=es_names)
+    _check_no_secondary_exchange(plan, lo_name, hi_name)
+    return plan
+
+
+def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
+    """N-way even split (used by the TPU spatial engine and the MoDNN baseline)."""
+    names = tuple(f"w{j}" for j in range(n))
+    sizes = net.sizes()
+    parts = []
+    for i, g in enumerate(net.layers):
+        o = sizes[i + 1]
+        segs = split_rows(o, [1.0 / n] * n)
+        out = dict(zip(names, segs))
+        inp = {
+            es: (
+                Segment(*input_range_exact(seg.lo, seg.hi, g.k, g.s, g.p, sizes[i]))
+                if seg
+                else EMPTY
+            )
+            for es, seg in out.items()
+        }
+        parts.append(LayerPartition(index=i, out=out, inp=inp))
+    return HALPPlan(net=net, parts=tuple(parts), es_names=names)
+
+
+def _check_no_secondary_exchange(plan: HALPPlan, lo_name: str, hi_name: str) -> None:
+    for i in range(len(plan.parts) - 1):
+        for a, b in ((lo_name, hi_name), (hi_name, lo_name)):
+            seg = plan.message(i, a, b)
+            if seg:
+                raise AssertionError(
+                    f"layer {i}: secondary {a} would need to send rows "
+                    f"{seg.lo}..{seg.hi} to {b}; widen the overlap zone"
+                )

@@ -1,0 +1,310 @@
+"""Discrete-event simulator for collaborative-ES schedules (ground truth).
+
+The paper's closed-form recursions (eqs. 16-20, 22-23) approximate a job/message
+DAG executed by FIFO compute resources (the ESs) and full-duplex point-to-point
+links.  This module simulates that DAG exactly:
+
+* every compute chunk and every message is a :class:`Job` bound to a resource,
+* a resource serves its jobs in submission order (list scheduling -- the paper's
+  schedule is static), a job starts when its resource is free *and* all
+  dependencies have finished,
+* the makespan of the sink job is the inference time.
+
+Benchmarks use this engine; ``tests/test_schedule.py`` cross-validates it
+against the closed forms.  The same engine doubles as the straggler /
+fault-injection harness of the runtime (``repro.runtime.fault``): per-resource
+slowdown factors and message-drop retries model node degradation at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .nets import ConvNetGeom, DTYPE_BYTES
+from .partition import E0, E1, E2, HALPPlan, plan_even, plan_halp
+from .schedule import Link, Platform
+
+__all__ = ["Sim", "Job", "simulate_halp", "simulate_modnn", "enhanced_modnn_delay"]
+
+
+@dataclass
+class Job:
+    jid: int
+    name: str
+    resource: str
+    duration: float
+    deps: tuple[int, ...]
+    start: float = 0.0
+    finish: float = 0.0
+
+
+class Sim:
+    """Static list-scheduling simulator over FIFO resources."""
+
+    def __init__(self) -> None:
+        self.jobs: list[Job] = []
+        self.slowdown: dict[str, float] = {}
+
+    def add(self, name: str, resource: str, duration: float, deps=()) -> int:
+        jid = len(self.jobs)
+        deps = tuple(d for d in deps if d is not None)
+        self.jobs.append(Job(jid, name, resource, max(0.0, duration), deps))
+        return jid
+
+    def run(self) -> float:
+        """Resolve start/finish for all jobs; returns the makespan."""
+        free: dict[str, float] = {}
+        # Jobs on a resource are served in submission order (FIFO). Because a
+        # later job on the same resource cannot start before an earlier one, a
+        # single forward pass in submission order is exact as long as deps only
+        # point backwards -- which the builders guarantee.
+        for job in self.jobs:
+            for d in job.deps:
+                if d >= job.jid:
+                    raise ValueError(f"forward dependency {d} -> {job.jid}")
+            ready = max((self.jobs[d].finish for d in job.deps), default=0.0)
+            start = max(ready, free.get(job.resource, 0.0))
+            dur = job.duration * self.slowdown.get(job.resource, 1.0)
+            job.start = start
+            job.finish = start + dur
+            free[job.resource] = job.finish
+        return max((j.finish for j in self.jobs), default=0.0)
+
+    def finish_of(self, jid: int) -> float:
+        return self.jobs[jid].finish
+
+
+def _chunk_time(net: ConvNetGeom, platform: Platform, i: int, rows: int) -> float:
+    width = net.sizes()[i + 1]
+    return platform.compute_time(net.layers[i].flops_per_out_row(width) * rows)
+
+
+def simulate_halp(
+    net: ConvNetGeom,
+    platform: Platform,
+    link: Link,
+    overlap_rows: int = 4,
+    n_tasks: int = 1,
+    host_platform: Platform | None = None,
+    slowdown: dict[str, float] | None = None,
+) -> dict:
+    """Simulate HALP for ``n_tasks`` tasks on 2*n_tasks secondaries + one host.
+
+    Resources: ``e0`` (host compute), ``e{k}^{t}`` (secondary compute),
+    ``link:a->b`` (directed point-to-point links; Ethernet full duplex).  The
+    host serves the per-task overlap zones in task order within each layer
+    (paper §IV.B).  ``slowdown`` maps resource name -> multiplicative factor
+    (straggler injection).
+    """
+    host_platform = host_platform or platform
+    plans = [plan_halp(net, overlap_rows=overlap_rows) for _ in range(n_tasks)]
+    sim = Sim()
+    if slowdown:
+        sim.slowdown.update(slowdown)
+    n_layers = len(net.layers)
+
+    # job-id bookkeeping: last compute chunk per (task, es) per layer, and the
+    # message that es needs before starting layer i.  The host gets one inbox
+    # slot per source secondary, so its top chunk only waits for e1's rows and
+    # its bottom chunk only for e2's.
+    last_chunk: dict[tuple[int, str], int | None] = {}
+    inbox: dict[tuple[int, str, int], int | None] = {}  # (task, es, layer) -> msg job
+    host_inbox: dict[tuple[int, int, str], int | None] = {}  # (task, layer, src)
+
+    def sec(t: int, ek: str) -> str:
+        return f"{ek}^{t}"
+
+    # initial image distribution host -> secondaries (eq. 10)
+    for t in range(n_tasks):
+        plan = plans[t]
+        for ek in (E1, E2):
+            nbytes = DTYPE_BYTES * plan.parts[0].inp[ek].rows * net.in_rows * net.in_channels
+            jid = sim.add(
+                f"int[{t}]{ek}", f"link:e0->{sec(t, ek)}", link.comm_time(nbytes)
+            )
+            inbox[(t, ek, 0)] = jid
+        inbox[(t, E0, 0)] = None
+
+    for i in range(n_layers):
+        # --- secondaries: dep chunk first, then rest; send dep while resting.
+        for t in range(n_tasks):
+            plan = plans[t]
+            for ek in (E1, E2):
+                own = plan.parts[i].out[ek]
+                dep = plan.message(i, ek, E0)
+                deps = [last_chunk.get((t, ek)), inbox.get((t, ek, i))]
+                a = sim.add(
+                    f"cmp[{t}]{ek}.g{i}.dep",
+                    sec(t, ek),
+                    _chunk_time(net, platform, i, dep.rows),
+                    deps,
+                )
+                m = sim.add(
+                    f"msg[{t}]{ek}->e0.g{i}",
+                    f"link:{sec(t, ek)}->e0",
+                    link.comm_time(plan.message_bytes(i, ek, E0)),
+                    [a],
+                )
+                b = sim.add(
+                    f"cmp[{t}]{ek}.g{i}.rest",
+                    sec(t, ek),
+                    _chunk_time(net, platform, i, own.rows - dep.rows),
+                    [a],
+                )
+                last_chunk[(t, ek)] = b
+                if i + 1 < n_layers:
+                    host_inbox[(t, i + 1, ek)] = m  # host needs this before layer i+1
+        # --- host: per task (in order): chunk for e1, send; chunk rest, send to e2.
+        for t in range(n_tasks):
+            plan = plans[t]
+            zone = plan.parts[i].out[E0]
+            m1 = plan.message(i, E0, E1)
+            deps = [last_chunk.get((t, E0)), host_inbox.get((t, i, E1))]
+            a = sim.add(
+                f"cmp[{t}]e0.g{i}.for_e1",
+                E0,
+                _chunk_time(net, host_platform, i, m1.rows),
+                deps,
+            )
+            s1 = sim.add(
+                f"msg[{t}]e0->e1.g{i}",
+                f"link:e0->{sec(t, E1)}",
+                link.comm_time(plan.message_bytes(i, E0, E1)),
+                [a],
+            )
+            b = sim.add(
+                f"cmp[{t}]e0.g{i}.rest",
+                E0,
+                _chunk_time(net, host_platform, i, zone.rows - m1.rows),
+                [a, host_inbox.get((t, i, E2))],
+            )
+            s2 = sim.add(
+                f"msg[{t}]e0->e2.g{i}",
+                f"link:e0->{sec(t, E2)}",
+                link.comm_time(plan.message_bytes(i, E0, E2)),
+                [b],
+            )
+            last_chunk[(t, E0)] = b
+            if i + 1 < n_layers:
+                inbox[(t, E1, i + 1)] = s1
+                inbox[(t, E2, i + 1)] = s2
+            # NOTE: the host->e0 "message" is local (no job).
+
+    # final merge: secondaries ship their g_N sub-outputs; host runs the head.
+    heads = []
+    for t in range(n_tasks):
+        plan = plans[t]
+        merged = []
+        for ek in (E1, E2):
+            m = sim.add(
+                f"final[{t}]{ek}->e0",
+                f"link:{sec(t, ek)}->e0",
+                link.comm_time(plan.message_bytes(n_layers - 1, ek, E0)),
+                [last_chunk[(t, ek)]],
+            )
+            merged.append(m)
+        h = sim.add(
+            f"head[{t}]",
+            E0,
+            host_platform.compute_time(net.head_flops),
+            merged + [last_chunk[(t, E0)]],
+        )
+        heads.append(h)
+    makespan = sim.run()
+    finishes = [sim.finish_of(h) for h in heads]
+    return dict(
+        total=makespan,
+        per_task_finish=finishes,
+        avg_delay=sum(finishes) / len(finishes),
+        sim=sim,
+    )
+
+
+def simulate_modnn(
+    net: ConvNetGeom,
+    platform: Platform,
+    link: Link,
+    n_workers: int,
+    slowdown: dict[str, float] | None = None,
+) -> dict:
+    """Conventional layer-wise parallelization (MoDNN): synchronous halo
+    exchange through the host after every CL; host NIC serialises transfers."""
+    plan = plan_even(net, n_workers)
+    names = plan.es_names
+    host = names[0]
+    sim = Sim()
+    if slowdown:
+        sim.slowdown.update(slowdown)
+    n_layers = len(net.layers)
+    last: dict[str, int | None] = {}
+    gate: dict[str, int | None] = {}  # message that worker w waits on before layer i
+
+    for w in names[1:]:
+        nbytes = DTYPE_BYTES * plan.parts[0].inp[w].rows * net.in_rows * net.in_channels
+        gate[w] = sim.add(f"int.{w}", f"link:{host}->{w}", link.comm_time(nbytes))
+    gate[host] = None
+
+    for i in range(n_layers):
+        chunks = {}
+        for w in names:
+            rows = plan.parts[i].out[w].rows
+            chunks[w] = sim.add(
+                f"cmp.{w}.g{i}", w, _chunk_time(net, platform, i, rows), [last.get(w), gate.get(w)]
+            )
+        # synchronous exchange: gathers serialise on host RX, scatters on host TX,
+        # and every worker waits for its scatter before the next layer.
+        gathers = []
+        for w in names:
+            for v in names:
+                if v == w:
+                    continue
+                nbytes = plan.message_bytes(i, w, v)
+                if nbytes:
+                    gathers.append(
+                        sim.add(
+                            f"gather.{w}->{v}.g{i}",
+                            f"{host}:rx",
+                            link.comm_time(nbytes),
+                            [chunks[w]],
+                        )
+                    )
+        barrier = sim.add(f"merge.g{i}", host, 0.0, [chunks[host]] + gathers)
+        for w in names:
+            need = sum(
+                plan.message_bytes(i, v, w) for v in names if v != w
+            )
+            if w == host or need == 0.0:
+                gate[w] = barrier
+            else:
+                gate[w] = sim.add(
+                    f"scatter.->{w}.g{i}", f"{host}:tx", link.comm_time(need), [barrier]
+                )
+        last = dict(chunks)
+
+    final = []
+    for w in names[1:]:
+        nbytes = net.feature_bytes(n_layers - 1, plan.parts[-1].out[w].rows)
+        final.append(
+            sim.add(f"final.{w}", f"{host}:rx", link.comm_time(nbytes), [last[w]])
+        )
+    head = sim.add("head", host, platform.compute_time(net.head_flops), final + [last[host]])
+    total = sim.run()
+    return dict(total=total, sim=sim)
+
+
+def enhanced_modnn_delay(
+    net: ConvNetGeom, platform: Platform, link: Link, n_es: int = 9, n_tasks: int = 4
+) -> dict:
+    """Paper §V.C 'Enhanced MoDNN': first (n_tasks - 1) tasks run in parallel on
+    disjoint groups of n_es // (n_tasks - 1) ESs, the last on all n_es.
+
+    Returns T^E1, T^E2, the average per-task delay T^E1 + T^E2/n_tasks and
+    throughput n_tasks / (T^E1 + T^E2)."""
+    group = n_es // (n_tasks - 1)
+    t_e1 = simulate_modnn(net, platform, link, group)["total"]
+    t_e2 = simulate_modnn(net, platform, link, n_es)["total"]
+    return dict(
+        T_E1=t_e1,
+        T_E2=t_e2,
+        avg_delay=t_e1 + t_e2 / n_tasks,
+        throughput=n_tasks / (t_e1 + t_e2),
+    )

@@ -1,0 +1,1 @@
+from .pipeline import DiffusionStream, ImageStream, TokenStream, device_batch

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (each with ops.py wrapper and
+ref.py pure-jnp oracle, validated in interpret mode):
+
+* conv2d    -- direct conv as MXU matmuls over VMEM row tiles (the paper's
+               hot-spot; explicit halo-tile materialisation mirrors HALP)
+* halo_conv -- HALP-fused spatially-sharded conv (interior tiles independent
+               of the ppermuted halos -> comm hides behind compute)
+* attention -- causal flash attention (online softmax over KV blocks)
+"""

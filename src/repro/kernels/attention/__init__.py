@@ -1,0 +1,3 @@
+from .attention import flash_attention
+from .ops import gqa_flash
+from .ref import attention_ref

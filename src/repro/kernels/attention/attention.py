@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash attention (causal), online-softmax over KV blocks.
+
+Grid: (batch*heads, n_q_blocks); the kernel scans KV blocks for one Q block,
+keeping the running max / normaliser / accumulator in VMEM.  Block shapes are
+MXU-aligned (q_block x d and kv_block x d matmuls).  This is the on-device
+analogue of models.attention._sdpa_chunked_causal (the pure-JAX oracle path).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_block: int, scale: float, causal: bool):
+    """One (bh, qi) grid step: q [1, QB, D]; k/v [1, S, D]; o [1, QB, D]."""
+    qb = q_ref.shape[1]
+    d = q_ref.shape[2]
+    s = k_ref.shape[1]
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # [QB, D]
+
+    m = jnp.full((qb,), NEG_INF, jnp.float32)
+    l = jnp.zeros((qb,), jnp.float32)
+    acc = jnp.zeros((qb, d), jnp.float32)
+
+    n_kv = s // kv_block
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kv_block), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (j * kv_block, 0), (kv_block, d))
+        v = jax.lax.dynamic_slice(v_ref[0], (j * kv_block, 0), (kv_block, d))
+        logits = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        if causal:
+            kv_pos = j * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (qb, kv_block), 1
+            )
+            logits = jnp.where(q_pos >= kv_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[:, None] * acc + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    if causal:
+        # only KV blocks up to (and including) the diagonal contribute
+        n_iter = jnp.minimum(n_kv, (qi + 1) * qb // kv_block + (1 if qb % kv_block else 0))
+        n_iter = jnp.maximum(n_iter, 1)
+    else:
+        n_iter = n_kv
+    m, l, acc = jax.lax.fori_loop(0, n_iter, body, (m, l, acc))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, H, T, D]
+    k: jax.Array,  # [B, H, S, D]
+    v: jax.Array,  # [B, H, S, D]
+    *,
+    causal: bool = True,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    assert t % q_block == 0 and s % kv_block == 0, (t, s, q_block, kv_block)
+    scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    kernel = functools.partial(
+        _flash_kernel, kv_block=kv_block, scale=scale, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, t // q_block),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)

@@ -1,0 +1,33 @@
+"""jit'd wrapper: GQA-aware flash attention entry point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import flash_attention
+
+
+def gqa_flash(
+    q: jax.Array,  # [B, T, H, D]  (model layout)
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped-query flash attention: broadcasts KV heads to Q heads and runs
+    the Pallas kernel in [B, H, T, D] layout."""
+    b, t, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    qb = 128 if t % 128 == 0 else max(x for x in (64, 32, 16, 8, 4, 2, 1) if t % x == 0)
+    kb = 128 if k.shape[1] % 128 == 0 else max(
+        x for x in (64, 32, 16, 8, 4, 2, 1) if k.shape[1] % x == 0
+    )
+    out = flash_attention(
+        qt, kt, vt, causal=causal, q_block=qb, kv_block=kb, interpret=interpret
+    )
+    return out.transpose(0, 2, 1, 3)

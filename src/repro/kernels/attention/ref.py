@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q [B,H,T,D], k/v [B,H,S,D] -> [B,H,T,D] (f32 math)."""
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    logits = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(t)[:, None] >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .conv2d import conv2d_tiles
+from .ops import conv2d_pallas
+from .ref import conv2d_ref

@@ -1,0 +1,53 @@
+"""jit'd wrapper for the Pallas direct-conv kernel: padding, halo-tile
+construction (the HALP boundary rows, materialised), VMEM budget heuristics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .conv2d import conv2d_tiles
+
+VMEM_BUDGET = 8 * 1024 * 1024  # bytes per grid step we allow ourselves
+
+
+def _pick_tile_h(h: int, w_ext: int, cin: int, cout: int, k: int, itemsize: int):
+    """Largest divisor tile height whose working set fits the VMEM budget."""
+    for th in [t for t in (64, 32, 16, 8, 4, 2, 1) if h % t == 0]:
+        tc = min(cout, 128)
+        need = (
+            (th + k - 1) * w_ext * cin + k * k * cin * tc + th * (w_ext - k + 1) * tc
+        ) * max(itemsize, 4)
+        if need <= VMEM_BUDGET:
+            return th
+    return 1
+
+
+def conv2d_pallas(
+    x: jax.Array,  # [N, H, W, Cin]  (NHWC)
+    weights: jax.Array,  # [k, k, Cin, Cout]
+    bias: jax.Array | None = None,
+    *,
+    padding: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stride-1 SAME/VALID conv via the Pallas kernel (k = weights.shape[0])."""
+    k = weights.shape[0]
+    n, h, w, cin = x.shape
+    cout = weights.shape[-1]
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    h_eff = x.shape[1] - (k - 1)  # output rows
+    w_ext = x.shape[2]
+    th = _pick_tile_h(h_eff, w_ext, cin, cout, k, x.dtype.itemsize)
+    nt = h_eff // th
+    # overlapping row tiles: tile t covers padded rows [t*th, t*th + th + k - 1)
+    idx = (jnp.arange(nt) * th)[:, None] + jnp.arange(th + k - 1)[None]
+    x_tiles = x[:, idx]  # [N, nT, TH + k - 1, W_ext, Cin]
+    cout_tile = min(cout, 128)
+    y = conv2d_tiles(
+        x_tiles, weights, k=k, tile_h=th, cout_tile=cout_tile, interpret=interpret
+    )
+    y = y.reshape(n, h_eff, w_ext - (k - 1), cout)
+    if bias is not None:
+        y = y + bias
+    return y

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the conv2d kernel (no lax.conv -- explicit tap sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(
+    x: jax.Array, weights: jax.Array, bias: jax.Array | None = None, *, padding: int = 1
+) -> jax.Array:
+    """Stride-1 conv, NHWC x [k,k,Cin,Cout]; sum of shifted einsums."""
+    k = weights.shape[0]
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    n, h, w, cin = x.shape
+    ho, wo = h - (k - 1), w - (k - 1)
+    acc = jnp.zeros((n, ho, wo, weights.shape[-1]), jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            patch = x[:, ky : ky + ho, kx : kx + wo, :].astype(jnp.float32)
+            acc = acc + jnp.einsum("nhwc,cd->nhwd", patch, weights[ky, kx].astype(jnp.float32))
+    if bias is not None:
+        acc = acc + bias
+    return acc.astype(x.dtype)

@@ -1,0 +1,3 @@
+from .halo_conv import halo_conv2d
+from .ops import conv2d_spatial_pallas
+from .ref import halo_conv2d_ref

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: HALP-fused spatially-sharded conv.
+
+Inside a shard_map program each device holds x_shard [B, Hs, W, C] plus the
+thin halos produced by ppermute (repro.spatial.halo).  The naive path
+materialises concat([top_halo, x, bot_halo]) in HBM before convolving; this op
+instead assembles only the *boundary row tiles* from the halos and feeds one
+``conv2d_tiles`` pallas_call -- the interior tiles gather straight from the
+shard.  That is HALP's schedule at kernel granularity: interior compute is
+independent of the halos, so XLA's latency-hiding scheduler overlaps the
+ppermute with the interior matmuls, and the boundary tiles are the only
+consumers of remote data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..conv2d.conv2d import conv2d_tiles
+from ..conv2d.ops import _pick_tile_h
+
+
+def halo_conv2d(
+    x_shard: jax.Array,  # [B, Hs, W, C]
+    top_halo: jax.Array | None,  # [B, lo, W, C] (already width-aligned with x)
+    bot_halo: jax.Array | None,  # [B, hi, W, C]
+    weights: jax.Array,  # [k, k, Cin, Cout]
+    bias: jax.Array | None = None,
+    *,
+    padding: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stride-1 conv over a height shard with explicit halos; returns the
+    shard's [B, Hs, W_out, Cout] output rows."""
+    k = weights.shape[0]
+    lo = 0 if top_halo is None else top_halo.shape[1]
+    hi = 0 if bot_halo is None else bot_halo.shape[1]
+    assert lo + hi == k - 1, "halos must cover the receptive field"
+    b, hs, w, cin = x_shard.shape
+    cout = weights.shape[-1]
+
+    def wpad(a):
+        return jnp.pad(a, ((0, 0), (0, 0), (padding, padding), (0, 0))) if padding else a
+
+    x = wpad(x_shard)
+    w_ext = x.shape[2]
+    th = _pick_tile_h(hs, w_ext, cin, cout, k, x.dtype.itemsize)
+    nt = hs // th
+
+    # interior tiles (no halo dependence) gather straight from the shard;
+    # boundary tiles splice in the halo rows.  Tile t covers extended rows
+    # [t*th - lo, t*th + th + hi) where extended row r maps to: top halo for
+    # r < 0, shard row r for 0 <= r < hs, bottom halo for r >= hs.
+    top_ext = wpad(top_halo) if top_halo is not None else None
+    bot_ext = wpad(bot_halo) if bot_halo is not None else None
+
+    def rows(lo_r: int, hi_r: int):  # extended rows [lo_r, hi_r)
+        pieces = []
+        if lo_r < 0:
+            seg = (
+                top_ext[:, lo + lo_r : lo + min(hi_r, 0)]
+                if top_ext is not None
+                else jnp.zeros((b, min(hi_r, 0) - lo_r, w_ext, cin), x.dtype)
+            )
+            pieces.append(seg)
+        mid_lo, mid_hi = max(lo_r, 0), min(hi_r, hs)
+        if mid_hi > mid_lo:
+            pieces.append(x[:, mid_lo:mid_hi])
+        if hi_r > hs:
+            seg = (
+                bot_ext[:, max(lo_r, hs) - hs : hi_r - hs]
+                if bot_ext is not None
+                else jnp.zeros((b, hi_r - max(lo_r, hs), w_ext, cin), x.dtype)
+            )
+            pieces.append(seg)
+        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
+
+    tiles = [rows(t * th - lo, t * th + th + hi) for t in range(nt)]
+    x_tiles = jnp.stack(tiles, axis=1)  # [B, nT, TH + k - 1, W_ext, C]
+    y = conv2d_tiles(
+        x_tiles,
+        weights,
+        k=k,
+        tile_h=th,
+        cout_tile=min(cout, 128),
+        interpret=interpret,
+    )
+    y = y.reshape(b, hs, w_ext - (k - 1), cout)
+    if bias is not None:
+        y = y + bias
+    return y

@@ -1,0 +1,35 @@
+"""shard_map-level wrapper: ppermute halos + the HALP-fused Pallas conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .halo_conv import halo_conv2d
+
+
+def conv2d_spatial_pallas(
+    x: jax.Array,  # [B, Hs, W, C] height shard
+    weights: jax.Array,
+    bias=None,
+    *,
+    padding: int = 1,
+    axis_name: str = "sp",
+    interpret: bool = False,
+) -> jax.Array:
+    """Drop-in for repro.spatial.halo.conv2d_spatial (k = weights k, s=1) with
+    the Pallas kernel as the compute body."""
+    k = weights.shape[0]
+    lo, hi = padding, k - 1 - padding
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    top = bot = None
+    if lo:
+        top = lax.ppermute(x[:, -lo:], axis_name, [(i, (i + 1) % n) for i in range(n)])
+        top = jnp.where(idx == 0, jnp.zeros_like(top), top)
+    if hi:
+        bot = lax.ppermute(x[:, :hi], axis_name, [(i, (i - 1) % n) for i in range(n)])
+        bot = jnp.where(idx == n - 1, jnp.zeros_like(bot), bot)
+    return halo_conv2d(
+        x, top, bot, weights, bias, padding=padding, interpret=interpret
+    )

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the halo conv: concat-then-conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..conv2d.ref import conv2d_ref
+
+
+def halo_conv2d_ref(x_shard, top_halo, bot_halo, weights, bias=None, *, padding=1):
+    parts = [p for p in (top_halo, x_shard, bot_halo) if p is not None]
+    ext = jnp.concatenate(parts, axis=1) if len(parts) > 1 else x_shard
+    # height is already extended by the halos; only pad width
+    k = weights.shape[0]
+    if padding:
+        ext = jnp.pad(ext, ((0, 0), (0, 0), (padding, padding), (0, 0)))
+    y = conv2d_ref(ext, weights, bias, padding=0)
+    return y

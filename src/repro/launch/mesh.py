@@ -1,0 +1,29 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run forces 512 host devices *before* any
+jax initialisation; tests and benches see the default single device)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "dp_axes", "fsdp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh):
+    """Axes carrying data parallelism (batch sharding)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh):
+    """Axes over which large models additionally shard parameters (ZeRO-3)."""
+    return dp_axes(mesh)

@@ -1,0 +1,50 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch vit-l16 --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --cell train_4k \
+        --steps 100 --ckpt-dir /tmp/ckpt
+
+Smoke-scale configs run real optimizer steps on the local device(s); full
+configs are launched the same way on a real TPU slice (the step bundle, the
+sharding rules and the fault-tolerant driver are identical -- only the mesh
+and ``--smoke`` flag change).  On a multi-host slice each process runs this
+same entrypoint (jax.distributed initializes from the TPU environment).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    args = ap.parse_args()
+
+    from repro.configs import get
+    from repro.runtime.fault import FaultConfig
+    from repro.runtime.train import make_trainer
+
+    arch = get(args.arch)
+    default_cell = {"lm": "train_4k", "vision": "cls_224", "diffusion": "train_256"}
+    cell = args.cell or default_cell[arch.family]
+    trainer, state = make_trainer(
+        args.arch,
+        cell,
+        smoke=not args.full,
+        fault_cfg=FaultConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
+    )
+    state, stats = trainer.run(state, args.steps, resume=not args.no_resume)
+    print(f"arch={args.arch} cell={cell} steps={stats.steps} failures={stats.failures}")
+    if stats.losses:
+        print(f"loss[0]={stats.losses[0]:.4f} loss[-1]={stats.losses[-1]:.4f}")
+        print(f"ema_step_s={stats.ema_step_s*1e3:.1f}ms stragglers={stats.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: pure-JAX definitions for the paper's VGG-16 and the 10 assigned
+architectures (see repro.configs)."""

@@ -1,0 +1,142 @@
+"""DiT (Peebles & Xie, arXiv:2212.09748) -- dit-xl2.
+
+Latent-space diffusion transformer with adaLN-zero conditioning.  The model
+runs on an 8x-downsampled latent (img_res/8) with patch size 2; a 50-step
+sampler is 50 forwards of this backbone (the drivers scan over steps).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import Params, conv_params, dense_params, keygen, norm_params, stack_layers, trunc_normal
+from .layers import dense, gelu, layernorm
+
+__all__ = ["DiTConfig", "init", "apply", "timestep_embedding"]
+
+
+@dataclass(frozen=True)
+class DiTConfig:
+    name: str = "dit-xl2"
+    img_res: int = 256
+    patch: int = 2
+    n_layers: int = 28
+    d_model: int = 1152
+    n_heads: int = 16
+    mlp_ratio: int = 4
+    latent_ch: int = 4
+    num_classes: int = 1000
+    learn_sigma: bool = True
+    remat: bool = True
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.latent_res // self.patch) ** 2
+
+    @property
+    def out_ch(self) -> int:
+        return self.latent_ch * (2 if self.learn_sigma else 1)
+
+
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10_000.0) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _block_init(key, d, mlp_ratio, dtype):
+    ks = keygen(key)
+    return {
+        "wqkv": dense_params(next(ks), d, 3 * d, dtype=dtype),
+        "wo": dense_params(next(ks), d, d, dtype=dtype),
+        "fc1": dense_params(next(ks), d, mlp_ratio * d, dtype=dtype),
+        "fc2": dense_params(next(ks), mlp_ratio * d, d, dtype=dtype),
+        # adaLN-zero modulation: 6 per-channel (shift, scale, gate) vectors;
+        # initialised to zero so every block starts as identity.
+        "ada": {
+            "w": jnp.zeros((d, 6 * d), dtype),
+            "b": jnp.zeros((6 * d,), dtype),
+        },
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def _block_apply(p, x, c, n_heads):
+    """x [B, N, D], c [B, D] conditioning."""
+    b, n, d = x.shape
+    mod = dense(gelu(c), p["ada"])  # [B, 6D]
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    h = _modulate(_ln(x), sh1, sc1)
+    qkv = dense(h, p["wqkv"]).reshape(b, n, 3, n_heads, d // n_heads)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    logits = jnp.einsum("bnhd,bmhd->bhnm", q, k) / jnp.sqrt(d / n_heads)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    a = jnp.einsum("bhnm,bmhd->bnhd", probs, v).reshape(b, n, d)
+    x = x + g1[:, None] * dense(a, p["wo"])
+    h = _modulate(_ln(x), sh2, sc2)
+    return x + g2[:, None] * dense(gelu(dense(h, p["fc1"])), p["fc2"])
+
+
+def _ln(x, eps=1e-6):
+    """Parameter-free LN (adaLN supplies scale/shift)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps)
+
+
+def init(key, cfg: DiTConfig, dtype=jnp.float32) -> Params:
+    ks = keygen(key)
+    d = cfg.d_model
+    return {
+        "patch_embed": conv_params(next(ks), cfg.patch, cfg.latent_ch, d, dtype=dtype),
+        "pos": trunc_normal(next(ks), (1, cfg.n_tokens, d), dtype=dtype),
+        "t_mlp1": dense_params(next(ks), 256, d, dtype=dtype),
+        "t_mlp2": dense_params(next(ks), d, d, dtype=dtype),
+        "label_embed": trunc_normal(next(ks), (cfg.num_classes + 1, d), 0.02, dtype),
+        "blocks": stack_layers(
+            lambda k: _block_init(k, d, cfg.mlp_ratio, dtype), next(ks), cfg.n_layers
+        ),
+        "final_ada": {"w": jnp.zeros((d, 2 * d), dtype), "b": jnp.zeros((2 * d,), dtype)},
+        "final": dense_params(next(ks), d, cfg.patch * cfg.patch * cfg.out_ch, dtype=dtype),
+    }
+
+
+def apply(params: Params, cfg: DiTConfig, x_latent, t, y) -> jax.Array:
+    """x_latent [B, H, W, C_lat], t [B] timesteps, y [B] class labels ->
+    predicted noise (+sigma) [B, H, W, out_ch]."""
+    from .layers import conv2d  # local import to avoid cycle
+
+    b, hh, ww, _ = x_latent.shape
+    x = conv2d(x_latent, params["patch_embed"], stride=cfg.patch, padding="VALID")
+    gh, gw = x.shape[1], x.shape[2]
+    x = x.reshape(b, gh * gw, cfg.d_model) + params["pos"][:, : gh * gw]
+    t_emb = timestep_embedding(t, 256).astype(x.dtype)
+    temb = dense(gelu(dense(t_emb, params["t_mlp1"])), params["t_mlp2"])
+    c = (temb + params["label_embed"][y]).astype(x.dtype)
+
+    def body(h, p_l):
+        return _block_apply(p_l, h, c, cfg.n_heads), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, params["blocks"])
+
+    mod = dense(gelu(c), params["final_ada"])
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = _modulate(_ln(x), sh, sc)
+    x = dense(x, params["final"])  # [B, N, p*p*out]
+    p_ = cfg.patch
+    x = x.reshape(b, gh, gw, p_, p_, cfg.out_ch).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * p_, gw * p_, cfg.out_ch)

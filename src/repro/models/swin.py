@@ -1,0 +1,198 @@
+"""Swin Transformer (Liu et al., arXiv:2103.14030) -- swin-b.
+
+Windowed attention has a *bounded receptive field*, so the paper's
+receptive-field partitioning applies directly: shifted windows need exactly a
+one-window halo, the transformer analogue of HALP's boundary exchange
+(see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import Params, conv_params, dense_params, keygen, norm_params, stack_layers, trunc_normal
+from .layers import conv2d, dense, gelu, layernorm, softmax_xent
+
+__all__ = ["SwinConfig", "init", "apply"]
+
+
+@dataclass(frozen=True)
+class SwinConfig:
+    name: str = "swin-b"
+    img_res: int = 224
+    patch: int = 4
+    window: int = 7
+    depths: tuple[int, ...] = (2, 2, 18, 2)
+    dims: tuple[int, ...] = (128, 256, 512, 1024)
+    n_heads: tuple[int, ...] = (4, 8, 16, 32)
+    mlp_ratio: int = 4
+    num_classes: int = 1000
+    in_channels: int = 3
+    remat: bool = True
+
+
+def _block_init(key, dim, heads, window, mlp_ratio, dtype):
+    ks = keygen(key)
+    return {
+        "ln1": norm_params(dim, dtype=dtype),
+        "wqkv": dense_params(next(ks), dim, 3 * dim, dtype=dtype),
+        "wo": dense_params(next(ks), dim, dim, dtype=dtype),
+        "rel_bias": trunc_normal(next(ks), ((2 * window - 1) ** 2, heads), dtype=dtype),
+        "ln2": norm_params(dim, dtype=dtype),
+        "fc1": dense_params(next(ks), dim, mlp_ratio * dim, dtype=dtype),
+        "fc2": dense_params(next(ks), mlp_ratio * dim, dim, dtype=dtype),
+    }
+
+
+def _rel_index(window: int) -> jax.Array:
+    """Relative-position index table for a window (static)."""
+    coords = jnp.stack(
+        jnp.meshgrid(jnp.arange(window), jnp.arange(window), indexing="ij"), 0
+    ).reshape(2, -1)
+    rel = coords[:, :, None] - coords[:, None, :]  # [2, n, n]
+    rel = rel + (window - 1)
+    return rel[0] * (2 * window - 1) + rel[1]  # [n, n]
+
+
+def _window_attention(p, x, heads, window, attn_mask=None):
+    """x: [B, nW, n, C] windows -> same shape."""
+    b, nw, n, c = x.shape
+    qkv = dense(x, p["wqkv"]).reshape(b, nw, n, 3, heads, c // heads)
+    q, k, v = qkv[..., 0, :, :], qkv[..., 1, :, :], qkv[..., 2, :, :]
+    logits = jnp.einsum("bwnhd,bwmhd->bwhnm", q, k) / jnp.sqrt(c / heads)
+    bias = p["rel_bias"][_rel_index(window).reshape(-1)].reshape(n, n, heads)
+    logits = logits + bias.transpose(2, 0, 1)[None, None]
+    if attn_mask is not None:  # [nW, n, n] boolean (True = keep)
+        logits = jnp.where(attn_mask[None, :, None], logits, -1e9)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    out = jnp.einsum("bwhnm,bwmhd->bwnhd", probs, v).reshape(b, nw, n, c)
+    return dense(out, p["wo"])
+
+
+def _to_windows(x, window):
+    """[B, H, W, C] -> [B, nW, window*window, C]"""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // window, window, w // window, window, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // window) * (w // window), window * window, c)
+
+
+def _from_windows(x, window, h, w):
+    b = x.shape[0]
+    c = x.shape[-1]
+    x = x.reshape(b, h // window, w // window, window, window, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, w, c)
+
+
+def _shift_mask(h, w, window, shift) -> jax.Array:
+    """Attention mask for shifted windows: tokens attend only within their
+    original region (static, computed with numpy-style ops at trace time)."""
+    img = jnp.zeros((h, w), jnp.int32)
+    bounds = (slice(0, -window), slice(-window, -shift), slice(-shift, None))
+    cnt = 0
+    for hb in bounds:
+        for wb in bounds:
+            img = img.at[hb, wb].set(cnt)
+            cnt += 1
+    win = _to_windows(img[None, :, :, None].astype(jnp.float32), window)[0, :, :, 0]
+    return win[:, :, None] == win[:, None, :]  # [nW, n, n]
+
+
+def _swin_block(p, x, heads, window, shift):
+    """x: [B, H, W, C]."""
+    b, h, w, c = x.shape
+    shortcut = x
+    x = layernorm(x, p["ln1"])
+    if shift:
+        x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
+        mask = _shift_mask(h, w, window, shift)
+    else:
+        mask = None
+    xw = _to_windows(x, window)
+    xw = _window_attention(p, xw, heads, window, mask)
+    x = _from_windows(xw, window, h, w)
+    if shift:
+        x = jnp.roll(x, (shift, shift), axis=(1, 2))
+    x = shortcut + x
+    h2 = layernorm(x, p["ln2"])
+    return x + dense(gelu(dense(h2, p["fc1"])), p["fc2"])
+
+
+def init(key, cfg: SwinConfig, dtype=jnp.float32) -> Params:
+    ks = keygen(key)
+    p: Params = {
+        "patch_embed": conv_params(next(ks), cfg.patch, cfg.in_channels, cfg.dims[0], dtype=dtype),
+        "patch_norm": norm_params(cfg.dims[0], dtype=dtype),
+        "stages": [],
+        "ln": norm_params(cfg.dims[-1], dtype=dtype),
+        "head": dense_params(next(ks), cfg.dims[-1], cfg.num_classes, dtype=dtype),
+    }
+    stages = []
+    for si, (depth, dim, heads) in enumerate(zip(cfg.depths, cfg.dims, cfg.n_heads)):
+        stage = {
+            "blocks": stack_layers(
+                lambda k, dim=dim, heads=heads: _block_init(
+                    k, dim, heads, cfg.window, cfg.mlp_ratio, dtype
+                ),
+                next(ks),
+                depth,
+            )
+        }
+        if si + 1 < len(cfg.depths):
+            stage["merge_norm"] = norm_params(4 * dim, dtype=dtype)
+            stage["merge"] = dense_params(next(ks), 4 * dim, cfg.dims[si + 1], bias=False, dtype=dtype)
+        stages.append(stage)
+    p["stages"] = stages
+    return p
+
+
+def apply(params: Params, cfg: SwinConfig, x: jax.Array) -> jax.Array:
+    b = x.shape[0]
+    x = conv2d(x, params["patch_embed"], stride=cfg.patch, padding="VALID")
+    x = layernorm(x, params["patch_norm"])
+    for si, stage in enumerate(params["stages"]):
+        heads = cfg.n_heads[si]
+        hcur = x.shape[1]
+        shift = cfg.window // 2 if hcur > cfg.window else 0
+        win = min(cfg.window, hcur)
+
+        # shallow stages unroll python-side; deep stages scan (regular, shifted)
+        # block *pairs* so HLO size stays bounded.
+        blocks = stage["blocks"]
+        depth = cfg.depths[si]
+        if depth >= 6 and depth % 2 == 0:
+            # scan over (regular, shifted) pairs to bound HLO size
+            pair = jax.tree_util.tree_map(
+                lambda a: a.reshape(depth // 2, 2, *a.shape[1:]), blocks
+            )
+
+            def pair_body(h, p_pair):
+                p0 = jax.tree_util.tree_map(lambda a: a[0], p_pair)
+                p1 = jax.tree_util.tree_map(lambda a: a[1], p_pair)
+                h = _swin_block(p0, h, heads, win, 0)
+                h = _swin_block(p1, h, heads, win, shift)
+                return h, None
+
+            if cfg.remat:
+                pair_body = jax.checkpoint(pair_body, prevent_cse=False)
+            x, _ = lax.scan(pair_body, x, pair)
+        else:
+            for li in range(depth):
+                p_l = jax.tree_util.tree_map(lambda a: a[li], blocks)
+                x = _swin_block(p_l, x, heads, win, shift if li % 2 else 0)
+        if "merge" in stage:  # patch merging: 2x2 neighbourhood -> next dim
+            bb, h, w, c = x.shape
+            x = x.reshape(bb, h // 2, 2, w // 2, 2, c).transpose(0, 1, 3, 2, 4, 5)
+            x = x.reshape(bb, h // 2, w // 2, 4 * c)
+            x = dense(layernorm(x, stage["merge_norm"]), stage["merge"])
+    x = layernorm(x, params["ln"])
+    return dense(jnp.mean(x, axis=(1, 2)), params["head"])
+
+
+def loss_fn(params, cfg: SwinConfig, images, labels):
+    logits = apply(params, cfg, images)
+    return softmax_xent(logits, labels), {"logits": logits}

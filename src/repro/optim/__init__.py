@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .grad_compress import compress_bf16, compress_topk, topk_sparsify
+from .schedules import constant, warmup_cosine

@@ -1,0 +1,79 @@
+"""AdamW from scratch (pytree-native), with optional low-precision moments.
+
+``moment_dtype=bfloat16`` halves optimizer memory -- required to fit the
+DeepSeek-671B config on a 512-chip v5e mesh (see DESIGN.md memory budget); the
+update math still runs in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = None  # None = param dtype
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> Params:
+    def zeros_like(p):
+        dt = cfg.moment_dtype or p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "mu": jax.tree_util.tree_map(zeros_like, params),
+        "nu": jax.tree_util.tree_map(zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    grads: Params,
+    state: Params,
+    params: Params,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+) -> tuple[Params, Params]:
+    """Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * clip
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        step = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}

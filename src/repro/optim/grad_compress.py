@@ -1,0 +1,42 @@
+"""Gradient compression for cross-pod data parallelism (beyond-paper feature).
+
+At multi-pod scale the ``pod`` axis rides the slowest links (DCI), so the
+cross-pod gradient all-reduce is the dominant collective.  Two standard
+compressors, both error-feedback-free and stateless (safe under pjit):
+
+* bf16 compression -- cast grads to bfloat16 *before* the cross-pod psum
+  (2x byte reduction; the within-pod reduction stays f32).
+* top-k-per-tensor magnitude sparsification with dense fallback for small
+  tensors (used by the fault-tolerant trainer when the link budget is tight).
+
+These mirror the HALP idea at another level of the hierarchy: shrink the bytes
+that must cross the slow boundary so the transfer hides behind compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads, like=None):
+    dt = jnp.float32
+    return jax.tree_util.tree_map(lambda g: g.astype(dt), grads)
+
+
+def topk_sparsify(g: jax.Array, frac: float = 0.05, min_size: int = 4096):
+    """Keep the top-|frac| entries by magnitude (dense mask form -- the sparse
+    *byte* accounting is what the roofline uses; XLA ships the masked tensor)."""
+    if g.size < min_size:
+        return g
+    k = max(1, int(g.size * frac))
+    flat = g.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0).reshape(g.shape)
+
+
+def compress_topk(grads, frac: float = 0.05):
+    return jax.tree_util.tree_map(lambda g: topk_sparsify(g, frac), grads)

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 1000, total: int = 100_000, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of peak; returns a scale."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup)
+    frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

@@ -1,0 +1,1 @@
+from .sharding import input_shardings, param_shardings, shard_rules, state_shardings

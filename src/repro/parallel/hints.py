@@ -1,0 +1,24 @@
+"""Activation-sharding hints: models call ``constrain(x, name)`` at annotated
+points; the launcher (or a perf variant) installs concrete shardings for the
+names it wants to pin.  Default: no-op, so models stay mesh-agnostic."""
+from __future__ import annotations
+
+import jax
+
+_RULES: dict[str, object] = {}
+
+
+def set_rules(rules: dict[str, object]) -> None:
+    global _RULES
+    _RULES = dict(rules)
+
+
+def clear_rules() -> None:
+    _RULES.clear()
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    sharding = _RULES.get(name)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

@@ -1,0 +1,97 @@
+"""Checkpointing: pytree <-> sharded .npz + msgpack manifest.
+
+Layout per checkpoint: ``<dir>/step_<N>/arrays.npz`` (one entry per leaf,
+keyed by the pytree path) + ``meta.msgpack`` (step, arch name, leaf index,
+dtypes).  Atomic via write-to-temp + rename; ``latest_step`` scans the
+directory so a restarted job resumes from the newest complete checkpoint
+(crash-consistent restore is exercised by tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _paths_and_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Any, extra: dict | None = None):
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        arrays = {}
+        manifest = []
+        for i, (key, leaf) in enumerate(_paths_and_leaves(tree)):
+            arr = np.asarray(leaf)
+            if arr.dtype == jnp.bfloat16:
+                arrays[f"a{i}"] = arr.view(np.uint16)
+                manifest.append({"key": key, "dtype": "bfloat16"})
+            else:
+                arrays[f"a{i}"] = arr
+                manifest.append({"key": key, "dtype": str(arr.dtype)})
+        np.savez(tmp / "arrays.npz", **arrays)
+        meta = {"step": step, "manifest": manifest, "extra": extra or {}}
+        (tmp / "meta.msgpack").write_bytes(msgpack.packb(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.iterdir():
+        if d.name.startswith("step_") and (d / "meta.msgpack").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | Path, like: Any, step: int | None = None):
+    """Restore into the structure of ``like`` (abstract or concrete pytree).
+    Returns (tree, step, extra)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    meta = msgpack.unpackb((d / "meta.msgpack").read_bytes())
+    data = np.load(d / "arrays.npz")
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    leaves = []
+    for i, entry in enumerate(meta["manifest"]):
+        arr = data[f"a{i}"]
+        if entry["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr))
+    if len(leaves) != len(flat_like):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(flat_like)}"
+        )
+    return treedef.unflatten(leaves), meta["step"], meta["extra"]

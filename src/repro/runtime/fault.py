@@ -1,0 +1,122 @@
+"""Fault tolerance: checkpoint/restart training, straggler detection, and the
+deadline model shared with the paper's §V-D reliability analysis.
+
+Design for 1000+ nodes (DESIGN.md):
+* **checkpoint/restart** -- the trainer checkpoints every K steps and replays
+  the deterministic data stream from the restored step; any step-level failure
+  (device error, injected fault) triggers restore-and-continue with bounded
+  retries.
+* **straggler mitigation** -- per-step wall-times feed an EMA; steps slower
+  than ``straggler_factor`` x EMA are counted and surfaced.  At scale the
+  launcher uses this signal to evict/replace slow hosts; the analytical twin
+  (core.simulator slowdown injection + core.reliability deadlines) quantifies
+  the effect on service deadlines, exactly as the paper does for time-variant
+  channels.
+* **elastic scaling** -- batches are pure functions of (seed, step) and
+  checkpoints are mesh-agnostic (host npz), so a restore onto a *different*
+  mesh (more or fewer pods) resumes bit-exactly; tests restore onto a fresh
+  state to prove it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["FaultConfig", "FaultTolerantTrainer", "InjectedFault"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by tests / chaos hooks to simulate node failure."""
+
+
+@dataclass
+class FaultConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    max_failures: int = 3
+    straggler_factor: float = 2.5
+    ema_alpha: float = 0.1
+
+
+@dataclass
+class TrainerStats:
+    steps: int = 0
+    failures: int = 0
+    restores: int = 0
+    stragglers: int = 0
+    ema_step_s: float = 0.0
+    losses: list = field(default_factory=list)
+
+
+class FaultTolerantTrainer:
+    """Wraps a jitted train step with checkpoint/restart + straggler stats.
+
+    ``step_fn(state, **batch) -> (state, metrics)``; ``stream.batch_at(i)``
+    must be deterministic in ``i`` (repro.data guarantees this)."""
+
+    def __init__(self, step_fn: Callable, stream, cfg: FaultConfig,
+                 fault_hook: Callable[[int], None] | None = None):
+        self.step_fn = step_fn
+        self.stream = stream
+        self.cfg = cfg
+        self.fault_hook = fault_hook
+        self.stats = TrainerStats()
+
+    def _maybe_restore(self, state):
+        step = latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return state, 0
+        state, step, _ = restore_checkpoint(self.cfg.ckpt_dir, state)
+        self.stats.restores += 1
+        return state, step
+
+    def run(self, state, n_steps: int, start_step: int = 0, resume: bool = True):
+        if resume:
+            state, start_step = self._maybe_restore(state)
+        i = start_step
+        failures = 0
+        while i < n_steps:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(i)  # chaos injection point
+                batch = self.stream.batch_at(i)
+                t0 = time.time()
+                state, metrics = self.step_fn(state, **batch)
+                jax.block_until_ready(metrics)
+                dt = time.time() - t0
+                self._track(dt, metrics)
+                i += 1
+                if i % self.cfg.ckpt_every == 0 or i == n_steps:
+                    save_checkpoint(self.cfg.ckpt_dir, i, state)
+            except (InjectedFault, RuntimeError) as e:
+                failures += 1
+                self.stats.failures += 1
+                if failures > self.cfg.max_failures:
+                    raise RuntimeError(
+                        f"exceeded {self.cfg.max_failures} failures; last: {e}"
+                    ) from e
+                # restore from the newest complete checkpoint and replay
+                step = latest_step(self.cfg.ckpt_dir)
+                if step is not None:
+                    state, i = self._maybe_restore(state)[0], step
+                else:
+                    i = start_step
+        return state, self.stats
+
+    def _track(self, dt: float, metrics):
+        s = self.stats
+        if s.ema_step_s == 0.0:
+            s.ema_step_s = dt
+        elif dt > self.cfg.straggler_factor * s.ema_step_s:
+            s.stragglers += 1
+        s.ema_step_s = (1 - self.cfg.ema_alpha) * s.ema_step_s + self.cfg.ema_alpha * dt
+        s.steps += 1
+        loss = metrics.get("total", metrics.get("loss", metrics.get("ce")))
+        if loss is not None:
+            s.losses.append(float(loss))

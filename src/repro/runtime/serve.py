@@ -1,0 +1,123 @@
+"""Serving engine: dynamic batching with the paper's deadline model.
+
+Requests arrive with a deadline; the batcher groups them (max batch / max
+delay), the engine runs the jitted forward (vision / VGG-HALP / LM decode),
+and per-request completion is checked against deadlines.  Batch-size selection
+uses the paper's reliability machinery: given the measured per-batch latency
+model and an offload-time distribution, ``choose_batch_size`` picks the
+largest batch whose P(deadline met) clears the target -- Table III turned into
+a scheduling policy (the beyond-paper integration of §V-D).
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.reliability import OffloadChannel, service_reliability
+
+__all__ = ["Request", "ServeConfig", "BatchingEngine", "choose_batch_size"]
+
+
+@dataclass(order=True)
+class Request:
+    deadline: float
+    rid: int = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+    arrival: float = field(compare=False, default=0.0)
+    done: float | None = field(compare=False, default=None)
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_delay_s: float = 0.002
+    pad_to_max: bool = True  # keep one compiled shape (prod: bucketed shapes)
+
+
+class BatchingEngine:
+    """Deadline-aware dynamic batcher around a jitted ``fn(batch_payloads)``."""
+
+    def __init__(self, fn: Callable, cfg: ServeConfig, clock: Callable = time.monotonic):
+        self.fn = fn
+        self.cfg = cfg
+        self.clock = clock
+        self.queue: list[Request] = []  # deadline-ordered heap (EDF)
+        self.completed: list[Request] = []
+        self._rid = 0
+
+    def submit(self, payload, deadline_s: float) -> int:
+        self._rid += 1
+        req = Request(
+            deadline=self.clock() + deadline_s,
+            rid=self._rid,
+            payload=payload,
+            arrival=self.clock(),
+        )
+        heapq.heappush(self.queue, req)
+        return self._rid
+
+    def _take_batch(self) -> list[Request]:
+        batch = []
+        while self.queue and len(batch) < self.cfg.max_batch:
+            batch.append(heapq.heappop(self.queue))
+        return batch
+
+    def step(self) -> list[Request]:
+        """Run one batch (earliest-deadline-first).  Returns completed reqs."""
+        batch = self._take_batch()
+        if not batch:
+            return []
+        payloads = [r.payload for r in batch]
+        n = len(payloads)
+        if self.cfg.pad_to_max and n < self.cfg.max_batch:
+            payloads = payloads + [payloads[-1]] * (self.cfg.max_batch - n)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payloads)
+        out = self.fn(stacked)
+        jax.block_until_ready(out)
+        now = self.clock()
+        for i, r in enumerate(batch):
+            r.done = now
+            r.result = jax.tree_util.tree_map(lambda x: x[i], out)
+            self.completed.append(r)
+        return batch
+
+    def run_until_drained(self, max_batches: int = 10_000):
+        b = 0
+        while self.queue and b < max_batches:
+            self.step()
+            b += 1
+        return self.stats()
+
+    def stats(self) -> dict:
+        met = [r for r in self.completed if r.done is not None and r.done <= r.deadline]
+        lat = [r.done - r.arrival for r in self.completed if r.done is not None]
+        return {
+            "completed": len(self.completed),
+            "deadline_met_frac": len(met) / max(1, len(self.completed)),
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+        }
+
+
+def choose_batch_size(
+    per_batch_latency_s: Callable[[int], float],
+    deadline_s: float,
+    channel: OffloadChannel,
+    target: float = 0.99999,
+    max_batch: int = 64,
+) -> int:
+    """Largest batch size whose service reliability clears ``target``
+    (paper §V-D as an admission-control policy)."""
+    best = 1
+    for b in range(1, max_batch + 1):
+        t_inf = per_batch_latency_s(b)
+        rel = service_reliability(channel, t_inf, deadline_s)
+        if rel >= target:
+            best = b
+    return best

@@ -1,0 +1,69 @@
+"""Training driver used by launch/train.py and the examples: builds the step
+bundle for an (arch, cell), wires the synthetic stream, and runs under the
+fault-tolerant trainer."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get
+from ..configs.steps import build, realize
+from ..data.pipeline import DiffusionStream, ImageStream, TokenStream
+from .fault import FaultConfig, FaultTolerantTrainer
+
+__all__ = ["make_trainer", "train_smoke"]
+
+
+def _stream_for(arch, cfg, bundle):
+    ins = bundle.inputs
+    if "tokens" in ins:
+        b, s = ins["tokens"].shape
+        return TokenStream(vocab=cfg.vocab, batch=b, seq_len=s)
+    if "images" in ins:
+        b, r = ins["images"].shape[:2]
+        return ImageStream(img_res=r, batch=b, num_classes=cfg.num_classes)
+    if "latents" in ins:
+        b, r = ins["latents"].shape[:2]
+        ctx = (cfg.ctx_len, cfg.ctx_dim) if hasattr(cfg, "ctx_dim") else None
+        ncls = getattr(cfg, "num_classes", 1000)
+        return DiffusionStream(latent_res=r, batch=b, latent_ch=ins["latents"].shape[-1],
+                               n_classes=ncls, ctx=ctx)
+    raise ValueError(f"no stream for inputs {list(ins)}")
+
+
+def make_trainer(
+    arch_name: str,
+    cell: str = "train_4k",
+    *,
+    smoke: bool = True,
+    fault_cfg: FaultConfig | None = None,
+    fault_hook=None,
+):
+    """Returns (trainer, initial_state)."""
+    arch = get(arch_name)
+    bundle = build(arch, cell, smoke=smoke)
+    cfg = arch.smoke_cfg if smoke else arch.cfg
+    state, _ = realize(arch, bundle, jax.random.PRNGKey(0), smoke=smoke)
+    stream = _stream_for(arch, cfg, bundle)
+    step_fn = jax.jit(bundle.fn, donate_argnums=(0,))
+    trainer = FaultTolerantTrainer(
+        step_fn, stream, fault_cfg or FaultConfig(), fault_hook=fault_hook
+    )
+    return trainer, state
+
+
+def train_smoke(arch_name: str, n_steps: int = 5, cell: str | None = None) -> dict:
+    """A few real optimizer steps on CPU; returns loss trajectory."""
+    cells = {"lm": "train_4k", "vision": "cls_224", "diffusion": "train_256"}
+    arch = get(arch_name)
+    cell = cell or cells[arch.family]
+    import tempfile
+
+    trainer, state = make_trainer(
+        arch_name, cell, fault_cfg=FaultConfig(ckpt_dir=tempfile.mkdtemp(), ckpt_every=1000)
+    )
+    state, stats = trainer.run(state, n_steps, resume=False)
+    return {"losses": stats.losses, "steps": stats.steps}

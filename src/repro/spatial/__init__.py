@@ -1,0 +1,5 @@
+"""TPU-native spatial parallelism: the paper's receptive-field partitioning as a
+shard_map halo-exchange engine (deployment form) plus a single-device plan
+executor (semantic model, used for losslessness proofs)."""
+from .halo import conv2d_spatial, exchange_halos, halo_sizes, max_pool_spatial
+from .partition_apply import run_plan, segment_forward

@@ -1,0 +1,146 @@
+"""SPMD spatial parallelism: receptive-field-exact halo exchange (TPU form of HALP).
+
+Under ``shard_map`` the image height axis is sharded across a mesh axis.  Each
+device computes a conv layer on its own rows after exchanging the thin halo the
+receptive field requires (``halo_lo = p`` rows from the neighbour above,
+``halo_hi = k - p - s`` rows from below, the exact analogue of the paper's
+eqs. 8-9 for an even N-way split).
+
+Two execution modes:
+
+* ``overlap=False`` -- exchange, then one VALID conv over the extended slab.
+* ``overlap=True``  -- the HALP schedule: the ``ppermute`` for the halos is
+  issued first, the *interior* rows (which need no remote data) are convolved
+  immediately, and the boundary rows are finished when the halos land.  On TPU
+  the XLA latency-hiding scheduler overlaps the collective with the interior
+  conv -- communication is hidden behind compute, exactly the paper's
+  "seamless collaboration" (see DESIGN.md for the host-ES -> SPMD mapping).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["halo_sizes", "exchange_halos", "conv2d_spatial", "max_pool_spatial"]
+
+
+def halo_sizes(k: int, s: int, p: int) -> tuple[int, int]:
+    """Rows needed from the neighbour above / below for an aligned shard."""
+    lo, hi = p, k - p - s
+    if lo < 0 or lo >= k or hi >= k:
+        raise ValueError(f"unsupported geometry k={k} s={s} p={p}")
+    return lo, max(0, hi)
+
+
+def exchange_halos(x: jax.Array, lo: int, hi: int, axis_name: str) -> jax.Array:
+    """Return x extended with ``lo`` rows from above and ``hi`` rows from below.
+
+    Edge shards receive zeros (the conv's zero padding).  x: [B, Hs, W, C].
+    """
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    parts = [x]
+    if lo:
+        down = [(i, (i + 1) % n) for i in range(n)]  # my bottom rows -> next shard
+        top = lax.ppermute(x[:, -lo:], axis_name, down)
+        top = jnp.where(idx == 0, jnp.zeros_like(top), top)
+        parts.insert(0, top)
+    if hi:
+        up = [(i, (i - 1) % n) for i in range(n)]  # my top rows -> previous shard
+        bot = lax.ppermute(x[:, :hi], axis_name, up)
+        bot = jnp.where(idx == n - 1, jnp.zeros_like(bot), bot)
+        parts.append(bot)
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else x
+
+
+def _conv_valid(x, p, s, groups=1):
+    y = lax.conv_general_dilated(
+        x, p["w"], (s, s), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv2d_spatial(
+    x: jax.Array,
+    params,
+    k: int,
+    s: int = 1,
+    p: int = 0,
+    axis_name: str = "sp",
+    overlap: bool = True,
+    groups: int = 1,
+) -> jax.Array:
+    """Spatially-sharded conv (height axis sharded over ``axis_name``).
+
+    Requires the shard height to be a multiple of ``s``.  Width uses ordinary
+    SAME semantics via explicit padding.
+    """
+    b, hs, w, c = x.shape
+    if hs % s:
+        raise ValueError(f"shard rows {hs} not divisible by stride {s}")
+    lo, hi = halo_sizes(k, s, p)
+    if p:  # width padding (the height padding is the edge shards' zero halos)
+        x = jnp.pad(x, ((0, 0), (0, 0), (p, p), (0, 0)))
+
+    if not overlap or (lo == 0 and hi == 0):
+        ext = exchange_halos(x, lo, hi, axis_name)
+        y = _conv_valid(ext, params, s, groups)
+        return y[:, : hs // s]
+
+    # --- HALP schedule: issue halos first, compute interior, then boundaries.
+    # (x is already width-padded, so the halos carry the width padding too.)
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    top_halo = bot_halo = None
+    if lo:
+        top_halo = lax.ppermute(
+            x[:, -lo:], axis_name, [(i, (i + 1) % n) for i in range(n)]
+        )
+        top_halo = jnp.where(idx == 0, jnp.zeros_like(top_halo), top_halo)
+    if hi:
+        bot_halo = lax.ppermute(
+            x[:, :hi], axis_name, [(i, (i - 1) % n) for i in range(n)]
+        )
+        bot_halo = jnp.where(idx == n - 1, jnp.zeros_like(bot_halo), bot_halo)
+
+    # Within-shard output row t (0-indexed) reads extended rows
+    # [t*s - lo, t*s - lo + k); interior rows touch no halo.
+    nrows = hs // s
+    t_lo = -(-lo // s)  # ceil(lo / s)
+    t_hi = (hs + lo - k) // s
+    if t_hi < t_lo:  # shard too thin for an interior: plain exchanged conv
+        parts = [q for q in (top_halo, x, bot_halo) if q is not None]
+        ext = jnp.concatenate(parts, axis=1) if len(parts) > 1 else x
+        return _conv_valid(ext, params, s, groups)[:, :nrows]
+
+    pieces = []
+    if t_lo > 0:  # top boundary rows 0..t_lo-1 finish once the top halo lands
+        slab = jnp.concatenate([top_halo, x[:, : (t_lo - 1) * s - lo + k]], axis=1)
+        pieces.append(_conv_valid(slab, params, s, groups)[:, :t_lo])
+    pieces.append(
+        _conv_valid(x[:, t_lo * s - lo : t_hi * s - lo + k], params, s, groups)
+    )
+    if t_hi + 1 < nrows:  # bottom boundary rows
+        slab = x[:, (t_hi + 1) * s - lo :]
+        if bot_halo is not None:
+            slab = jnp.concatenate([slab, bot_halo], axis=1)
+        pieces.append(_conv_valid(slab, params, s, groups)[:, : nrows - t_hi - 1])
+    return jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+
+
+def max_pool_spatial(x: jax.Array, k: int = 2, s: int = 2, axis_name: str = "sp") -> jax.Array:
+    """Spatially-sharded max pool (aligned shards need no halo when k == s)."""
+    b, hs, w, c = x.shape
+    if hs % s:
+        raise ValueError("shard not aligned to pool stride")
+    lo, hi = halo_sizes(k, s, 0)
+    x = exchange_halos(x, lo, hi, axis_name)
+    y = lax.reduce_window(x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+    return y[:, : hs // s]

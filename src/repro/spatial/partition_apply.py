@@ -1,0 +1,115 @@
+"""Execute a HALP plan segment-by-segment and verify losslessness (paper §II-§IV).
+
+This is the paper's collaboration scheme as *executable dataflow*: each ES's
+feature rows are materialised separately, and the input of every layer segment
+is reconstructed **strictly** from (a) rows the ES computed itself and (b) the
+inter-ES messages the plan prescribes (eqs. 10-14 / exact range algebra).  If
+the plan's messages were insufficient, reconstruction would fail loudly --
+so equality with the single-device reference proves both the receptive-field
+partitioning *and* the message algebra.
+
+Runs on a single device (no shard_map): this is the semantic model. The SPMD
+deployment form lives in ``repro.spatial.halo``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.nets import ConvNetGeom
+from ..core.partition import HALPPlan, Segment
+from ..core.rf import input_range_exact
+
+__all__ = ["run_plan", "segment_forward"]
+
+
+def _raw_range(o_lo: int, o_hi: int, k: int, s: int, p: int) -> tuple[int, int]:
+    """Unclipped input range (may extend into the zero padding)."""
+    return (o_lo - 1) * s + 1 - p, (o_hi - 1) * s + k - p
+
+
+def segment_forward(apply_layer, params, geom, x_rows: jax.Array, seg: Segment,
+                    avail: Segment, in_rows: int) -> jax.Array:
+    """Compute output rows ``seg`` of one layer given input rows ``avail``
+    (a contiguous, 1-indexed slice of the layer input held in ``x_rows``)."""
+    raw_lo, raw_hi = _raw_range(seg.lo, seg.hi, geom.k, geom.s, geom.p)
+    lo, hi = max(raw_lo, 1), min(raw_hi, in_rows)
+    if not (avail.lo <= lo and hi <= avail.hi):
+        raise AssertionError(
+            f"insufficient rows: need {lo}..{hi}, have {avail.lo}..{avail.hi}"
+        )
+    sl = x_rows[:, lo - avail.lo : hi - avail.lo + 1]
+    pad_top = lo - raw_lo
+    pad_bot = raw_hi - hi
+    padw = geom.p if geom.kind != "pool" else 0
+    if pad_top or pad_bot or padw:
+        sl = jnp.pad(sl, ((0, 0), (pad_top, pad_bot), (padw, padw), (0, 0)))
+    y = apply_layer(params, geom, sl)
+    assert y.shape[1] == seg.rows, (y.shape, seg)
+    return y
+
+
+def run_plan(
+    plan: HALPPlan,
+    layer_params: list,
+    apply_layer,
+    x: jax.Array,
+) -> jax.Array:
+    """Run the full plan; returns the merged final feature map (host side).
+
+    ``apply_layer(params, geom, x_slice)`` must be the VALID-padding layer
+    primitive (``repro.models.vgg.apply_layer`` or compatible).
+    """
+    net: ConvNetGeom = plan.net
+    sizes = net.sizes()
+    es_names = plan.es_names
+
+    # initial distribution: each ES receives its eq.-(10) image slice
+    avail: dict[str, tuple[Segment, jax.Array]] = {}
+    for es in es_names:
+        seg = plan.parts[0].inp[es]
+        avail[es] = (seg, x[:, seg.lo - 1 : seg.hi])
+
+    outs: dict[str, jax.Array] = {}
+    for i, g in enumerate(net.layers):
+        part = plan.parts[i]
+        outs = {
+            es: (
+                segment_forward(
+                    apply_layer, layer_params[i], g, avail[es][1], part.out[es],
+                    avail[es][0], sizes[i],
+                )
+                if part.out[es]
+                else None
+            )
+            for es in es_names
+        }
+        if i + 1 == len(net.layers):
+            break
+        # message exchange: every ES's next-layer input = own rows + messages
+        new_avail = {}
+        for dst in es_names:
+            pieces: list[tuple[Segment, jax.Array]] = []
+            own = part.out[dst]
+            if own:
+                pieces.append((own, outs[dst]))
+            for src in es_names:
+                seg = plan.message(i, src, dst)
+                if seg:
+                    src_seg = part.out[src]
+                    sl = outs[src][:, seg.lo - src_seg.lo : seg.hi - src_seg.lo + 1]
+                    pieces.append((seg, sl))
+            if not pieces:  # ES owns no rows at this depth (tiny feature map)
+                new_avail[dst] = (Segment(1, 0), None)
+                continue
+            pieces.sort(key=lambda t: t[0].lo)
+            for (a, _), (b, _) in zip(pieces, pieces[1:]):
+                if b.lo != a.hi + 1:
+                    raise AssertionError(f"non-contiguous input for {dst} at layer {i}")
+            seg_all = Segment(pieces[0][0].lo, pieces[-1][0].hi)
+            new_avail[dst] = (seg_all, jnp.concatenate([t[1] for t in pieces], axis=1))
+        avail = new_avail
+
+    # final merge on the host (paper: sub-outputs -> FL input)
+    ordered = sorted(es_names, key=lambda es: plan.parts[-1].out[es].lo)
+    return jnp.concatenate([outs[es] for es in ordered if plan.parts[-1].out[es]], axis=1)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward / train / decode step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, list_archs
+from repro.configs.steps import build, realize
+
+LM_ARCHS = ["qwen3-4b", "codeqwen1.5-7b", "moonshot-v1-16b-a3b", "deepseek-v3-671b"]
+VISION_ARCHS = ["vit-l16", "swin-b", "convnext-b", "efficientnet-b7"]
+DIFFUSION_ARCHS = ["dit-xl2", "unet-sd15"]
+
+
+def _finite(tree) -> bool:
+    return all(
+        bool(jnp.isfinite(x).all())
+        for x in jax.tree_util.tree_leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    )
+
+
+def test_registry_complete():
+    archs = list_archs()
+    for a in LM_ARCHS + VISION_ARCHS + DIFFUSION_ARCHS + ["vgg16"]:
+        assert a in archs
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_train_smoke(name):
+    arch = get(name)
+    bundle = build(arch, "train_4k", smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    fn = jax.jit(bundle.fn)
+    new_state, metrics = fn(state, **inputs)
+    assert _finite(metrics), metrics
+    assert float(metrics["total"]) > 0
+    # a second step must also be finite (optimizer state is sane)
+    new_state2, metrics2 = fn(new_state, **inputs)
+    assert _finite(metrics2)
+    assert int(new_state2[2]) == 2
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_decode_smoke(name):
+    arch = get(name)
+    bundle = build(arch, "decode_32k", smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    logits, new_cache = jax.jit(bundle.fn)(state, **inputs)
+    assert logits.shape == (2, arch.smoke_cfg.vocab)
+    assert _finite(logits)
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_prefill_smoke(name):
+    arch = get(name)
+    bundle = build(arch, "prefill_32k", smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    logits = jax.jit(bundle.fn)(state, **inputs)
+    assert logits.shape[-1] == arch.smoke_cfg.vocab
+    assert _finite(logits)
+
+
+def test_lm_long_500k_skip_recorded():
+    for name in LM_ARCHS:
+        cell = get(name).cells["long_500k"]
+        assert cell.skip and "sub-quadratic" in cell.skip
+
+
+@pytest.mark.parametrize("name", VISION_ARCHS)
+@pytest.mark.parametrize("cell", ["cls_224", "serve_b1"])
+def test_vision_smoke(name, cell):
+    arch = get(name)
+    bundle = build(arch, cell, smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    out = jax.jit(bundle.fn)(state, **inputs)
+    if bundle.kind == "train":
+        _, metrics = out
+        assert _finite(metrics)
+    else:
+        assert out.shape == (1, arch.smoke_cfg.num_classes)
+        assert _finite(out)
+
+
+@pytest.mark.parametrize("name", DIFFUSION_ARCHS)
+def test_diffusion_train_smoke(name):
+    arch = get(name)
+    bundle = build(arch, "train_256", smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    new_state, metrics = jax.jit(bundle.fn)(state, **inputs)
+    assert _finite(metrics)
+    assert float(metrics["loss"]) > 0
+
+
+@pytest.mark.parametrize("name", DIFFUSION_ARCHS)
+def test_diffusion_gen_smoke(name):
+    arch = get(name)
+    bundle = build(arch, "gen_fast", smoke=True)
+    state, inputs = realize(arch, bundle, jax.random.PRNGKey(0))
+    lat = jax.jit(bundle.fn)(state, **inputs)
+    assert lat.shape == inputs["latents"].shape
+    assert _finite(lat)
+
+
+def test_decode_matches_forward_gqa():
+    """Decode with a KV cache must reproduce teacher-forced forward logits."""
+    arch = get("qwen3-4b")
+    cfg = arch.smoke_cfg
+    from repro.models import transformer_lm as lm
+
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    full_logits, _ = lm.forward(params, cfg, toks)
+    cache = lm.init_cache(cfg, 2, 16)
+    for i in range(8):
+        step_logits, cache = lm.decode_step(params, cfg, cache, toks[:, i : i + 1], i)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full_logits[:, i]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_decode_matches_forward_mla():
+    arch = get("deepseek-v3-671b")
+    cfg = arch.smoke_cfg
+    from repro.models import transformer_lm as lm
+
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    full_logits, _ = lm.forward(params, cfg, toks)
+    cache = lm.init_cache(cfg, 2, 12)
+    for i in range(6):
+        step_logits, cache = lm.decode_step(params, cfg, cache, toks[:, i : i + 1], i)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full_logits[:, i]), rtol=2e-4, atol=2e-4
+        )

@@ -1,0 +1,54 @@
+"""Benchmark-level reproduction assertions: our numbers vs. the paper's."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import paper_tables
+
+
+def test_table2_reproduction_quality():
+    """HALP throughput within 8% of the paper at every (platform, rate)."""
+    out = paper_tables.table2_throughput()
+    for (plat, rate), (ours, paper) in out.items():
+        assert abs(ours - paper) / paper < 0.08, (plat, rate, ours, paper)
+
+
+def test_fig6_speedup_band():
+    """Single-task x-speedup covers the paper's claim (1.7-2.0x or better)."""
+    out = paper_tables.fig6_single_task()
+    for (plat, rate), (speedup, rho) in out.items():
+        assert speedup >= 1.7, (plat, rate, speedup)
+        assert 0 < rho < 1
+
+
+def test_fig7_multi_task_band():
+    """4-task average-delay speedup in/above the paper's 1.67-1.81x band."""
+    out = paper_tables.fig7_multi_task()
+    for (plat, rate), speedup in out.items():
+        assert 1.55 <= speedup <= 2.3, (plat, rate, speedup)
+
+
+def test_table3_reproduction_quality():
+    """Reliability within 2e-3 of the paper at the paper-implied constants."""
+    out = paper_tables.table3_reliability()
+    for key, (ours, paper) in out.items():
+        assert abs(ours - paper) < 2e-3, (key, ours, paper)
+
+
+def test_roofline_results_complete():
+    """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
+    skip), i.e. deliverables (e)/(g) are materialised."""
+    from benchmarks import roofline
+
+    for mesh in ("pod16x16", "pod2x16x16"):
+        recs = roofline.load_all(mesh)
+        if not recs:
+            pytest.skip(f"dry-run not yet executed for {mesh}")
+        assert len(recs) == 40, (mesh, len(recs))
+        bad = [r for r in recs if r["status"] not in ("ok", "skipped")]
+        assert not bad, [(r["arch"], r["cell"], r.get("error", "")[:60]) for r in bad]
+        skips = [r for r in recs if r["status"] == "skipped"]
+        assert len(skips) == 4  # long_500k x 4 full-attention LMs
