@@ -1,0 +1,94 @@
+"""Heterogeneity sweep: capacity-aware HALP vs. the paper's naive equal split.
+
+The paper evaluates HALP on identical secondaries only; real edge clusters mix
+device generations and link qualities.  This benchmark sweeps secondary speed
+ratios and link-rate asymmetries on VGG-16 and reports, for each scenario,
+
+* the naive equal-split plan's simulated makespan (the paper's default),
+* the capacity-weighted plan (ratios proportional to effective FLOP/s), and
+* the optimizer-chosen plan (coordinate descent over ratios x overlap),
+
+plus the N-way scaling of the symmetric cluster.  CSV rows
+(``name,us_per_call,derived``) match the other benchmarks' format.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (
+    GTX_1080TI,
+    CollabTopology,
+    Link,
+    equal_ratios,
+    evaluate_plan,
+    optimize_plan,
+    simulate_halp,
+    standalone_time,
+    vgg16_geom,
+)
+
+NET = vgg16_geom()
+
+
+def _two_secondary_topology(slow_factor: float, slow_gbps: float, fast_gbps: float = 40.0):
+    slow = GTX_1080TI.scaled(slow_factor, f"slow x{slow_factor:g}")
+    return CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        links={
+            ("e0", "fast"): Link(fast_gbps * 1e9), ("fast", "e0"): Link(fast_gbps * 1e9),
+            ("e0", "slow"): Link(slow_gbps * 1e9), ("slow", "e0"): Link(slow_gbps * 1e9),
+        },
+    )
+
+
+def sweep_heterogeneous_pairs() -> dict:
+    """One fast + one slow secondary across speed/link asymmetry levels."""
+    out = {}
+    print("\n== Heterogeneity sweep: equal split vs capacity split vs optimizer (ms) ==")
+    print(f"{'scenario':28s} {'equal':>8s} {'capacity':>9s} {'optimized':>10s} {'gain':>7s}")
+    for slow_factor, slow_gbps in (
+        (1.0, 40.0), (0.7, 40.0), (0.5, 40.0), (0.35, 10.0), (0.25, 5.0),
+    ):
+        topo = _two_secondary_topology(slow_factor, slow_gbps)
+        equal = evaluate_plan(NET, topo, equal_ratios(topo), 4)
+        capacity = evaluate_plan(NET, topo, topo.capacity_ratios(), 4)
+        res = optimize_plan(NET, topo)
+        gain = 1.0 - res.makespan / equal
+        name = f"slow_x{slow_factor:g}_@{slow_gbps:g}G"
+        print(
+            f"{name:28s} {equal*1e3:8.3f} {capacity*1e3:9.3f} {res.makespan*1e3:10.3f} "
+            f"{gain*100:6.1f}%  (ratios={[round(r, 3) for r in res.ratios]}, w={res.overlap_rows})"
+        )
+        print(f"hetero_{name},{res.makespan*1e6:.1f},{gain:.4f}")
+        out[name] = dict(
+            equal=equal, capacity=capacity, optimized=res.makespan,
+            ratios=res.ratios, overlap=res.overlap_rows, gain=gain,
+        )
+    return out
+
+
+def sweep_nway_scaling() -> dict:
+    """Symmetric N-way scaling: more collaborating pairs on one host."""
+    out = {}
+    t_pre = standalone_time(NET, GTX_1080TI)
+    print("\n== N-way scaling, identical secondaries @ 40 Gbps ==")
+    print(f"{'N':>3s} {'T (ms)':>8s} {'speedup':>8s}")
+    for n in (2, 3, 4, 5):
+        topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=n)
+        t = simulate_halp(NET, topology=topo)["total"]
+        print(f"{n:3d} {t*1e3:8.3f} {t_pre/t:7.2f}x")
+        print(f"nway_{n},{t*1e6:.1f},{t_pre/t:.3f}")
+        out[n] = dict(total=t, speedup=t_pre / t)
+    return out
+
+
+def run_all() -> dict:
+    return dict(pairs=sweep_heterogeneous_pairs(), nway=sweep_nway_scaling())
+
+
+if __name__ == "__main__":
+    run_all()

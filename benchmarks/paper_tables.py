@@ -18,7 +18,10 @@ from repro.core import (
     Link,
     OffloadChannel,
     enhanced_modnn_delay,
+    equal_ratios,
+    evaluate_plan,
     halp_closed_form,
+    optimize_plan,
     plan_halp,
     rate_fluctuation,
     service_reliability,
@@ -190,13 +193,42 @@ def table3_reliability() -> dict:
     return out
 
 
+def table4_heterogeneous_optimizer() -> dict:
+    """Beyond the paper: optimizer-chosen plans on a heterogeneous cluster.
+
+    One fast (1080TI-class) + one 0.35x secondary behind a 10 Gbps link; the
+    naive equal split (the paper's default partition) vs. the coordinate-
+    descent optimum over (segment ratios, overlap rows).  The scenario is the
+    sweep's ``slow_x0.35_@10G`` point, built by the same helper so the two
+    benchmarks cannot diverge; see ``benchmarks/hetero_sweep.py``."""
+    try:
+        from .hetero_sweep import _two_secondary_topology
+    except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+        from hetero_sweep import _two_secondary_topology
+
+    topo = _two_secondary_topology(slow_factor=0.35, slow_gbps=10.0)
+    equal = evaluate_plan(NET, topo, equal_ratios(topo), 4)
+    res = optimize_plan(NET, topo)
+    gain = 1.0 - res.makespan / equal
+    print("\n== Table IV (ours): heterogeneous cluster, equal split vs optimizer ==")
+    print(
+        f"  equal-split {equal*1e3:7.3f} ms   optimized {res.makespan*1e3:7.3f} ms "
+        f"({gain*100:.1f}% faster; ratios={[round(r, 3) for r in res.ratios]}, "
+        f"overlap={res.overlap_rows} rows, {res.evaluations} simulator evals)"
+    )
+    print(f"table4_hetero_opt,{res.makespan*1e6:.1f},{gain:.4f}")
+    return dict(equal=equal, optimized=res.makespan, gain=gain, ratios=res.ratios,
+                overlap_rows=res.overlap_rows)
+
+
 def run_all():
     t1 = table1_layer_times()
     f6 = fig6_single_task()
     f7 = fig7_multi_task()
     t2 = table2_throughput()
     t3 = table3_reliability()
-    return dict(table1=t1, fig6=f6, fig7=f7, table2=t2, table3=t3)
+    t4 = table4_heterogeneous_optimizer()
+    return dict(table1=t1, fig6=f6, fig7=f7, table2=t2, table3=t3, table4=t4)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,19 @@
 """The paper's contribution: receptive-field-exact partitioning (rf, partition),
-HALP / MoDNN scheduling (schedule), exact event simulation (simulator), and the
+HALP / MoDNN scheduling over arbitrary collaboration topologies (topology,
+schedule), one shared event topology feeding both latency engines (events),
+exact event simulation (simulator), plan-knob search (optimizer), and the
 service-reliability model (reliability)."""
 from .nets import ConvNetGeom, vgg16_geom
-from .partition import HALPPlan, Segment, plan_even, plan_halp, split_rows
+from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
+from .partition import (
+    HALPPlan,
+    Segment,
+    plan_even,
+    plan_halp,
+    plan_halp_n,
+    plan_halp_topology,
+    split_rows,
+)
 from .reliability import OffloadChannel, rate_fluctuation, service_reliability
 from .rf import (
     LayerGeom,
@@ -17,11 +28,10 @@ from .schedule import (
     AGX_XAVIER,
     GTX_1080TI,
     TPU_V5E,
-    Link,
-    Platform,
     halp_closed_form,
     modnn_time,
     speedup_ratio,
     standalone_time,
 )
 from .simulator import Sim, enhanced_modnn_delay, simulate_halp, simulate_modnn
+from .topology import CollabTopology, Link, Platform

@@ -1,0 +1,300 @@
+"""Shared HALP event topology: one plan-walk feeding both latency engines.
+
+The closed-form recursion (``repro.core.schedule``) and the discrete-event
+simulator (``repro.core.simulator``) must price the *same* jobs and messages
+or their cross-validation is meaningless.  Historically each engine re-derived
+the message structure from the plan independently; this module centralises it:
+
+* per-slot *dependent* rows (the boundary rows a secondary must compute first
+  and ship to its adjacent host zones, paper eq. 16's t_cmp^dep),
+* per-zone host chunks (rows each adjacent secondary is waiting for,
+  eqs. 11-12 / 18), the initial image slices (eq. 10) and the final sub-output
+  merge (eqs. 13-14), and
+* :func:`build_halp_dag`, which lays the full job/message DAG onto any
+  ``Sim``-compatible scheduler with per-ES platforms and per-link rates drawn
+  from a :class:`~repro.core.topology.CollabTopology`.
+
+The closed form consumes the per-layer quantities; the simulator consumes the
+DAG.  Both therefore see identical work and identical bytes by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .nets import ConvNetGeom, DTYPE_BYTES
+from .partition import HALPPlan, Segment, plan_halp_topology
+from .topology import CollabTopology
+
+__all__ = [
+    "SecStep",
+    "ZoneStep",
+    "init_bytes",
+    "sec_step",
+    "zone_step",
+    "final_bytes",
+    "resolve_halp_setup",
+    "build_halp_dag",
+]
+
+
+def resolve_halp_setup(
+    net: ConvNetGeom,
+    platform=None,
+    link=None,
+    overlap_rows: int | None = None,
+    topology: CollabTopology | None = None,
+    ratios=None,
+    plan: HALPPlan | None = None,
+    host_platform=None,
+) -> tuple[CollabTopology, HALPPlan]:
+    """Resolve the two calling conventions shared by both latency engines.
+
+    Paper-style ``(platform, link)`` builds the symmetric two-secondary
+    topology with the paper's equal split; topology-style takes an explicit
+    :class:`CollabTopology` (capacity-weighted ratios by default).  Conflicting
+    combinations raise ``TypeError`` instead of silently ignoring arguments."""
+    if plan is not None and (ratios is not None or overlap_rows is not None):
+        raise TypeError(
+            "plan= already fixes the partition; do not also pass "
+            "ratios/overlap_rows (they would be silently ignored)"
+        )
+    if topology is None:
+        if platform is None or link is None:
+            raise TypeError("pass either (platform, link) or topology=")
+        topology = CollabTopology.symmetric(platform, link, host_platform=host_platform)
+        if ratios is None:
+            ratios = (0.5, 0.5)  # the paper's equal split, not capacity-weighted
+    elif platform is not None or link is not None or host_platform is not None:
+        raise TypeError(
+            "topology= already carries platforms and links; do not also pass "
+            "platform/link/host_platform (they would be silently ignored)"
+        )
+    if plan is None:
+        plan = plan_halp_topology(
+            net, topology, overlap_rows=4 if overlap_rows is None else overlap_rows,
+            ratios=ratios,
+        )
+    return topology, plan
+
+
+def init_bytes(plan: HALPPlan, sec_slot: str) -> float:
+    """Eq. (10): bytes of the initial image slice sent to a secondary ES."""
+    net = plan.net
+    seg = plan.parts[0].inp[sec_slot]
+    return DTYPE_BYTES * seg.rows * net.in_rows * net.in_channels
+
+
+def final_bytes(plan: HALPPlan, sec_slot: str) -> float:
+    """Eqs. (13)-(14): the g_N sub-output a secondary ships for the head merge."""
+    return plan.message_bytes(len(plan.parts) - 1, sec_slot, plan.host)
+
+
+@dataclass(frozen=True)
+class SecStep:
+    """One secondary slot's work at one layer."""
+
+    slot: str
+    own_rows: int
+    dep_rows: int  # boundary rows computed first (sum over adjacent zones)
+    sends: tuple[tuple[str, Segment, float], ...]  # (zone, rows, bytes) to host
+
+
+@dataclass(frozen=True)
+class ZoneStep:
+    """One host zone's work at one layer: a chunk per adjacent secondary."""
+
+    slot: str
+    zone_rows: int
+    above: str  # secondary above the zone (its rows are computed first)
+    below: str
+    rows_for_above: int
+    bytes_to_above: float
+    bytes_to_below: float
+
+
+def _union_rows(segs: list[Segment]) -> int:
+    """Distinct rows covered by possibly-overlapping segments (a 1-row middle
+    secondary can owe the *same* row to both adjacent zones; it computes it
+    once)."""
+    rows = 0
+    cur_hi = 0
+    for seg in sorted((s for s in segs if s), key=lambda s: s.lo):
+        lo = max(seg.lo, cur_hi + 1)
+        if seg.hi >= lo:
+            rows += seg.hi - lo + 1
+            cur_hi = seg.hi
+    return rows
+
+
+def sec_step(plan: HALPPlan, layer: int, slot: str) -> SecStep:
+    own = plan.parts[layer].out[slot]
+    if layer + 1 >= len(plan.parts):
+        # g_N: the whole sub-output is the boundary (eqs. 13-14).  The seed
+        # convention -- kept for every N so cross-N accounting is uniform --
+        # prices this send here AND in the final merge; the nominal zone key
+        # is inert (no next layer to gate).
+        zones = plan.adjacent_zones(slot)
+        sends = (
+            ((zones[0], own, plan.message_bytes(layer, slot, plan.host)),)
+            if own and zones
+            else ()
+        )
+        return SecStep(slot=slot, own_rows=own.rows, dep_rows=own.rows, sends=sends)
+    sends = []
+    for z in plan.adjacent_zones(slot):
+        seg = plan.message(layer, slot, z)
+        sends.append((z, seg, plan.message_bytes(layer, slot, z)))
+    return SecStep(
+        slot=slot,
+        own_rows=own.rows,
+        dep_rows=min(own.rows, _union_rows([seg for _, seg, _ in sends])),
+        sends=tuple(sends),
+    )
+
+
+def zone_step(plan: HALPPlan, layer: int, slot: str) -> ZoneStep:
+    above, below = plan.adjacent_secondaries(slot)
+    m_above = plan.message(layer, slot, above)
+    return ZoneStep(
+        slot=slot,
+        zone_rows=plan.parts[layer].out[slot].rows,
+        above=above,
+        below=below,
+        rows_for_above=m_above.rows,
+        bytes_to_above=plan.message_bytes(layer, slot, above),
+        bytes_to_below=plan.message_bytes(layer, slot, below),
+    )
+
+
+def _row_flops(net: ConvNetGeom) -> list[float]:
+    """Per-layer FLOPs per output row, hoisted once per DAG build (``sizes()``
+    is O(layers), so calling it per job would be quadratic)."""
+    sizes = net.sizes()
+    return [g.flops_per_out_row(sizes[i + 1]) for i, g in enumerate(net.layers)]
+
+
+def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list[int]:
+    """Lay the full HALP job/message DAG for ``len(plans)`` concurrent tasks.
+
+    Resources: the host ES name (host compute), ``{slot}^{t}`` (secondary
+    compute, one instance per task), ``link:a->b`` (directed point-to-point
+    links, full duplex).  The host serves the per-task zones in task order
+    within each layer (paper §IV.B).  Returns the head job id of every task.
+
+    Per layer, each secondary computes its dependent boundary rows first and
+    ships them to the adjacent host zones while computing the rest (eq. 16);
+    the host computes each zone's rows-for-above chunk, sends it, then the
+    rest, then sends below (eq. 18) -- zone j's chunks gate on the boundary
+    messages of the adjacent secondaries from the previous layer.
+    """
+    net = plans[0].net
+    host = plans[0].host
+    n_layers = len(net.layers)
+    n_tasks = len(plans)
+    row_flops = _row_flops(net)
+
+    def sec_res(t: int, slot: str) -> str:
+        return f"{slot}^{t}"
+
+    def cmp_time(es: str, layer: int, rows: int) -> float:
+        return topology.platform_of(es).compute_time(row_flops[layer] * rows)
+
+    last_chunk: dict[tuple[int, str], int | None] = {}
+    # (task, sec_slot, layer) -> message jobs the secondary needs before layer
+    sec_gate: dict[tuple[int, str, int], list[int]] = {}
+    # (task, layer, zone_slot, src_sec) -> boundary message gating a zone chunk
+    zone_gate: dict[tuple[int, int, str, str], int] = {}
+
+    # initial image distribution host -> secondaries (eq. 10)
+    for t, plan in enumerate(plans):
+        for s in plan.secondary_slots:
+            jid = sim.add(
+                f"int[{t}]{s}",
+                f"link:{host}->{sec_res(t, s)}",
+                topology.link_between(host, s).comm_time(init_bytes(plan, s)),
+            )
+            sec_gate[(t, s, 0)] = [jid]
+
+    for i in range(n_layers):
+        # --- secondaries: dep chunk first, then rest; send dep while resting.
+        for t, plan in enumerate(plans):
+            for s in plan.secondary_slots:
+                step = sec_step(plan, i, s)
+                deps = [last_chunk.get((t, s))] + sec_gate.get((t, s, i), [])
+                a = sim.add(
+                    f"cmp[{t}]{s}.g{i}.dep",
+                    sec_res(t, s),
+                    cmp_time(s, i, step.dep_rows),
+                    deps,
+                )
+                for z, _seg, nbytes in step.sends:
+                    m = sim.add(
+                        f"msg[{t}]{s}->{host}.g{i}",
+                        f"link:{sec_res(t, s)}->{host}",
+                        topology.link_between(s, host).comm_time(nbytes),
+                        [a],
+                    )
+                    if i + 1 < n_layers:
+                        zone_gate[(t, i + 1, z, s)] = m
+                b = sim.add(
+                    f"cmp[{t}]{s}.g{i}.rest",
+                    sec_res(t, s),
+                    cmp_time(s, i, step.own_rows - step.dep_rows),
+                    [a],
+                )
+                last_chunk[(t, s)] = b
+        # --- host: per task, zones in row order: chunk for the secondary above,
+        # send; chunk the rest (gated on the below secondary's rows), send below.
+        for t, plan in enumerate(plans):
+            for z in plan.zone_slots:
+                step = zone_step(plan, i, z)
+                a = sim.add(
+                    f"cmp[{t}]{z}.g{i}.for_{step.above}",
+                    host,
+                    cmp_time(host, i, step.rows_for_above),
+                    [last_chunk.get((t, host)), zone_gate.get((t, i, z, step.above))],
+                )
+                s1 = sim.add(
+                    f"msg[{t}]{z}->{step.above}.g{i}",
+                    f"link:{host}->{sec_res(t, step.above)}",
+                    topology.link_between(host, step.above).comm_time(step.bytes_to_above),
+                    [a],
+                )
+                b = sim.add(
+                    f"cmp[{t}]{z}.g{i}.rest",
+                    host,
+                    cmp_time(host, i, step.zone_rows - step.rows_for_above),
+                    [a, zone_gate.get((t, i, z, step.below))],
+                )
+                s2 = sim.add(
+                    f"msg[{t}]{z}->{step.below}.g{i}",
+                    f"link:{host}->{sec_res(t, step.below)}",
+                    topology.link_between(host, step.below).comm_time(step.bytes_to_below),
+                    [b],
+                )
+                last_chunk[(t, host)] = b
+                if i + 1 < n_layers:
+                    sec_gate.setdefault((t, step.above, i + 1), []).append(s1)
+                    sec_gate.setdefault((t, step.below, i + 1), []).append(s2)
+                # NOTE: zone rows stay on the host -- no job for the local move.
+
+    # final merge: secondaries ship their g_N sub-outputs; host runs the head.
+    heads = []
+    for t, plan in enumerate(plans):
+        merged = []
+        for s in plan.secondary_slots:
+            m = sim.add(
+                f"final[{t}]{s}->{host}",
+                f"link:{sec_res(t, s)}->{host}",
+                topology.link_between(s, host).comm_time(final_bytes(plan, s)),
+                [last_chunk[(t, s)]],
+            )
+            merged.append(m)
+        h = sim.add(
+            f"head[{t}]",
+            host,
+            topology.platform_of(host).compute_time(net.head_flops),
+            merged + [last_chunk[(t, host)]],
+        )
+        heads.append(h)
+    return heads

@@ -1,0 +1,155 @@
+"""Latency-minimising search over HALP plan knobs (segment ratios, overlap).
+
+The paper fixes the partition a priori (equal halves, a 4-row zone); on a
+heterogeneous cluster that leaves latency on the table -- a fast secondary
+should own more rows (DistrEdge, arXiv 2202.01699) and the optimal overlap
+width trades host work against host->secondary boundary traffic.  This module
+searches those knobs directly against the discrete-event simulator (the ground
+truth the paper's recursion approximates):
+
+* decision variables: the N secondary segment ratios (a simplex point) and the
+  overlap-zone width in output rows,
+* objective: the simulated makespan of ``n_tasks`` concurrent tasks on the
+  given :class:`~repro.core.topology.CollabTopology`,
+* method: cyclic coordinate descent on the ratio simplex (move mass onto one
+  secondary at a time, renormalise) interleaved with an exhaustive scan of the
+  overlap choices, with step-size halving -- the objective is piecewise
+  constant in the ratios (segments are integer rows), so gradient-free moves
+  with a shrinking step are the right tool.
+
+Infeasible candidates (a plan whose messages would skip a slot, or more slots
+than rows) are rejected by the partitioner's invariant checks and priced +inf.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from .nets import ConvNetGeom
+from .partition import HALPPlan, plan_halp_topology
+from .simulator import simulate_halp
+from .topology import CollabTopology
+
+__all__ = ["OptimizeResult", "optimize_plan", "evaluate_plan", "equal_ratios"]
+
+
+@dataclass
+class OptimizeResult:
+    ratios: tuple[float, ...]
+    overlap_rows: int
+    makespan: float
+    plan: HALPPlan
+    evaluations: int
+    history: list[tuple[tuple[float, ...], int, float]] = field(default_factory=list)
+
+
+def equal_ratios(topology: CollabTopology) -> tuple[float, ...]:
+    """The naive capacity-blind split (the paper's default)."""
+    n = topology.n_secondaries
+    return tuple(1.0 / n for _ in range(n))
+
+
+def evaluate_plan(
+    net: ConvNetGeom,
+    topology: CollabTopology,
+    ratios: Sequence[float],
+    overlap_rows: int,
+    n_tasks: int = 1,
+) -> float:
+    """Simulated makespan of one candidate; +inf if the plan is infeasible."""
+    try:
+        plan = plan_halp_topology(net, topology, overlap_rows=overlap_rows, ratios=ratios)
+        return simulate_halp(net, topology=topology, n_tasks=n_tasks, plan=plan)["total"]
+    except (AssertionError, ValueError):
+        return float("inf")
+
+
+def optimize_plan(
+    net: ConvNetGeom,
+    topology: CollabTopology,
+    n_tasks: int = 1,
+    overlap_choices: Sequence[int] = (2, 4, 6, 8),
+    init_ratios: Sequence[float] | None = None,
+    step: float = 0.08,
+    min_step: float = 0.005,
+    min_ratio: float = 0.02,
+    max_rounds: int = 12,
+    objective: Callable[[tuple[float, ...], int], float] | None = None,
+) -> OptimizeResult:
+    """Coordinate-descent search for the fastest (ratios, overlap) pair.
+
+    Starts from the topology's capacity-weighted ratios (or ``init_ratios``),
+    then alternates (a) an exhaustive scan of ``overlap_choices`` and (b) one
+    cyclic pass moving ratio mass onto/off each secondary, halving the step
+    whenever a full round fails to improve.  Terminates when the step falls
+    below ``min_step`` or after ``max_rounds``.
+
+    ``objective`` may replace the default simulated-makespan objective (e.g.
+    to optimise the closed form instead, or average delay for multi-task)."""
+    evals = 0
+    history: list[tuple[tuple[float, ...], int, float]] = []
+
+    def default_objective(ratios: tuple[float, ...], w: int) -> float:
+        return evaluate_plan(net, topology, ratios, w, n_tasks=n_tasks)
+
+    fn = objective or default_objective
+
+    def priced(ratios: tuple[float, ...], w: int) -> float:
+        nonlocal evals
+        evals += 1
+        v = fn(ratios, w)
+        history.append((ratios, w, v))
+        return v
+
+    def renorm(raw: Sequence[float]) -> tuple[float, ...]:
+        clipped = [max(min_ratio, r) for r in raw]
+        total = sum(clipped)
+        return tuple(r / total for r in clipped)
+
+    ratios = renorm(init_ratios or topology.capacity_ratios())
+    n = len(ratios)
+    best_w = overlap_choices[0]
+    best = float("inf")
+    for w in overlap_choices:
+        v = priced(ratios, w)
+        if v < best:
+            best, best_w = v, w
+
+    rounds = 0
+    while step >= min_step and rounds < max_rounds:
+        rounds += 1
+        improved = False
+        for j in range(n):
+            for sign in (1.0, -1.0):
+                raw = list(ratios)
+                raw[j] = max(min_ratio, raw[j] + sign * step)
+                cand = renorm(raw)
+                if cand == ratios:
+                    continue
+                v = priced(cand, best_w)
+                if v < best:
+                    best, ratios, improved = v, cand, True
+        for w in overlap_choices:
+            if w == best_w:
+                continue
+            v = priced(ratios, w)
+            if v < best:
+                best, best_w, improved = v, w, True
+        if not improved:
+            step *= 0.5
+    if not math.isfinite(best):
+        raise ValueError(
+            f"no feasible HALP plan for {topology.n_secondaries} secondaries on "
+            f"{net.name} over overlap choices {tuple(overlap_choices)}; use fewer "
+            f"secondaries or a larger input"
+        )
+    plan = plan_halp_topology(net, topology, overlap_rows=best_w, ratios=ratios)
+    return OptimizeResult(
+        ratios=ratios,
+        overlap_rows=best_w,
+        makespan=best,
+        plan=plan,
+        evaluations=evals,
+        history=history,
+    )

@@ -1,25 +1,37 @@
 """Segment-based task partitioning (paper §III, eqs. 5-9) and the HALP plan.
 
-The host ES partitions every layer's *output rows* into three contiguous
-segments (paper Fig. 2 / eqs. 6-7):
+The host ES partitions every layer's *output rows* into contiguous **slots**
+along the row axis.  Slots alternate between secondary segments and host-owned
+overlapping zones (paper Fig. 2 / eqs. 6-7); with N secondaries there are
+K = N - 1 zones:
+
+    s_0 | zone_0 | s_1 | zone_1 | ... | zone_{K-1} | s_K
+
+For the paper's symmetric pair this degenerates to the familiar triple
 
     rows 1..a           -> secondary e1
     rows a+1..a+w       -> host e0     (the "overlapping zone", w ~ 4 rows)
     rows a+w+1..O       -> secondary e2
 
-and derives each ES's required *input rows* from the receptive-field arithmetic
-(eqs. 8-9 / exact interval algebra).  All inter-ES messages follow from range
-intersections, so the plan is lossless by construction.  The same machinery
-generalises to K collaborating pairs (paper §IV.B) and to N-way even splits for
-the TPU spatial-parallel engine (``repro.spatial``).
+Each slot's required *input rows* follow from the receptive-field arithmetic
+(eqs. 8-9 / exact interval algebra), and all inter-slot messages follow from
+range intersections, so the plan is lossless by construction.  Secondary
+segment sizes may be *capacity-weighted* (``ratios``; DistrEdge-style unequal
+splits for heterogeneous ESs), and every zone is owned by the host, preserving
+the scheme's invariant that secondaries never exchange rows directly.
+``plan_even`` provides the N-way even split for the TPU spatial-parallel
+engine (``repro.spatial``) and the MoDNN baseline.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Sequence, TYPE_CHECKING
 
 from .nets import ConvNetGeom, DTYPE_BYTES
 from .rf import input_range_exact
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from .topology import CollabTopology
 
 __all__ = [
     "Segment",
@@ -27,6 +39,8 @@ __all__ = [
     "HALPPlan",
     "split_rows",
     "plan_halp",
+    "plan_halp_n",
+    "plan_halp_topology",
     "plan_even",
 ]
 
@@ -56,18 +70,48 @@ EMPTY = Segment(1, 0)
 
 @dataclass(frozen=True)
 class LayerPartition:
-    """Partition of one layer: output segments and required input ranges per ES."""
+    """Partition of one layer: output segments and required input ranges per slot."""
 
     index: int
     out: dict[str, Segment]
-    inp: dict[str, Segment]  # exact input rows each ES needs (eqs. 8-9, exact form)
+    inp: dict[str, Segment]  # exact input rows each slot needs (eqs. 8-9, exact form)
 
 
 @dataclass(frozen=True)
 class HALPPlan:
     net: ConvNetGeom
     parts: tuple[LayerPartition, ...]
-    es_names: tuple[str, ...]  # order along rows: (e1, e0, e2) or N-way
+    es_names: tuple[str, ...]  # slot names in row order: (e1, e0, e2) or N-way
+    host: str = E0  # the ES that owns every overlapping zone
+    slot_owner: tuple[str, ...] = ()  # parallel to es_names; () -> slots own themselves
+
+    def owner_of(self, slot: str) -> str:
+        """The physical ES that computes ``slot`` (zones resolve to the host)."""
+        if self.slot_owner:
+            return self.slot_owner[self.es_names.index(slot)]
+        return slot
+
+    @property
+    def secondary_slots(self) -> tuple[str, ...]:
+        return tuple(s for s in self.es_names if self.owner_of(s) != self.host)
+
+    @property
+    def zone_slots(self) -> tuple[str, ...]:
+        return tuple(s for s in self.es_names if self.owner_of(s) == self.host)
+
+    def adjacent_zones(self, sec_slot: str) -> tuple[str, ...]:
+        """Host zone slots bordering a secondary slot (above first, in row order)."""
+        idx = self.es_names.index(sec_slot)
+        out = []
+        for j in (idx - 1, idx + 1):
+            if 0 <= j < len(self.es_names) and self.owner_of(self.es_names[j]) == self.host:
+                out.append(self.es_names[j])
+        return tuple(out)
+
+    def adjacent_secondaries(self, zone_slot: str) -> tuple[str, str]:
+        """The (above, below) secondary slots bordering a host zone."""
+        idx = self.es_names.index(zone_slot)
+        return self.es_names[idx - 1], self.es_names[idx + 1]
 
     def owner_rows(self, layer: int, es: str) -> Segment:
         return self.parts[layer].out[es]
@@ -78,7 +122,7 @@ class HALPPlan:
         if layer + 1 >= len(self.parts):
             # final layer: everything the secondaries own is sent to the host
             # to be merged as the FL input (paper eqs. 13-14, g_i = g_N case).
-            if dst == E0 and src != E0:
+            if dst == self.host and self.owner_of(src) != self.host:
                 return self.parts[layer].out[src]
             return EMPTY
         need = self.parts[layer + 1].inp[dst]
@@ -112,16 +156,19 @@ class HALPPlan:
 def split_rows(total: int, ratios: Sequence[float]) -> list[Segment]:
     """Paper eqs. (6)-(7) generalised: contiguous segments by cumulative ratio.
 
-    Segments exactly cover 1..total; rounding via cumulative floor keeps every
-    segment within +-1 row of its exact ratio share.
-    """
+    Segments exactly cover 1..total; rounding via the cumulative boundary keeps
+    every segment within +-1 row of its exact ratio share.  Heavily skewed
+    ratios on small totals may produce *empty* segments (lo > hi) -- callers
+    that need a minimum occupancy must redistribute (see ``plan_halp_n``)."""
+    if total < 0:
+        raise ValueError(f"total must be >= 0, got {total}")
     if abs(sum(ratios) - 1.0) > 1e-9:
         raise ValueError(f"ratios must sum to 1, got {sum(ratios)}")
     bounds = [0]
     acc = 0.0
     for r in ratios[:-1]:
         acc += r
-        bounds.append(int(round(acc * total)))
+        bounds.append(min(total, max(bounds[-1], int(round(acc * total)))))
     bounds.append(total)
     return [Segment(lo + 1, hi) for lo, hi in zip(bounds[:-1], bounds[1:])]
 
@@ -130,56 +177,155 @@ def _align_down(x: int, align: int) -> int:
     return (x // align) * align
 
 
+def _pool_alignment(net: ConvNetGeom, i: int, o: int) -> int:
+    """Product of pooling strides between layer i and the next conv, reduced
+    until it is small relative to the feature map (seed heuristic)."""
+    align = 1
+    for h in net.layers[i + 1 :]:
+        if h.kind != "pool":
+            break
+        align *= h.s
+    while align > max(1, o // 4):
+        align //= 2
+    return max(1, align)
+
+
+def _min_one_unit(counts: list[int], body_u: int) -> list[int]:
+    """Give every secondary at least one unit when the body is large enough,
+    taking units from the largest segment (largest-remainder style fixup)."""
+    n = len(counts)
+    if body_u < n:
+        return counts
+    counts = list(counts)
+    while min(counts) < 1:
+        counts[counts.index(max(counts))] -= 1
+        counts[counts.index(min(counts))] += 1
+    return counts
+
+
+def _conv_slot_rows(
+    o: int, overlap_rows: int, ratios: Sequence[float], align: int
+) -> list[int]:
+    """Row counts of the 2K+1 slots (sec, zone, sec, ..., sec) for one conv layer.
+
+    Works in units of ``align`` so that both edges of every host zone land on
+    pooling-stride multiples (pools never cross a slot boundary); the last
+    secondary absorbs the division remainder."""
+    n_sec = len(ratios)
+    k_zones = n_sec - 1
+    w_eff = min(overlap_rows, max(1, o - 2))
+    units = o // align
+    w_u = max(1, -(-w_eff // align))  # ceil
+    while units - k_zones * w_u < n_sec and w_u > 1:
+        w_u -= 1
+    body_u = units - k_zones * w_u
+    if body_u < 0:
+        raise ValueError(
+            f"cannot fit {n_sec} secondaries + {k_zones} zones into {o} rows"
+        )
+    sec_u = _min_one_unit([s.rows for s in split_rows(body_u, ratios)], body_u)
+    counts = []
+    for j in range(n_sec):
+        counts.append(sec_u[j] * align)
+        if j < k_zones:
+            counts.append(w_u * align)
+    counts[-1] += o - units * align  # remainder rows go to the last secondary
+    return counts
+
+
 def plan_halp(
     net: ConvNetGeom,
     overlap_rows: int = 4,
     es_names: tuple[str, str, str] = (E1, E0, E2),
+    ratios: Sequence[float] | None = None,
 ) -> HALPPlan:
-    """Build the HALP partition for a conv net (paper §IV.A).
-
-    Per layer the host zone is ``overlap_rows`` output rows centred between two
-    near-equal secondary segments.  Boundaries are kept even in front of stride-2
-    layers so pooling never crosses a segment boundary (paper: "the host ES does
-    not need to send the output of the current CL ... for the pooling layer").
-    The plan asserts that secondaries never need each other's rows -- all
-    boundary traffic flows through the host, as the scheme requires.
-    """
+    """The paper's 2-secondary HALP partition (§IV.A) -- thin wrapper over
+    :func:`plan_halp_n` preserving the original ``(e1, e0, e2)`` interface."""
     lo_name, host, hi_name = es_names
+    return plan_halp_n(
+        net,
+        secondaries=(lo_name, hi_name),
+        host=host,
+        overlap_rows=overlap_rows,
+        ratios=ratios,
+    )
+
+
+def plan_halp_n(
+    net: ConvNetGeom,
+    secondaries: Sequence[str],
+    host: str = E0,
+    overlap_rows: int = 4,
+    ratios: Sequence[float] | None = None,
+) -> HALPPlan:
+    """Build the N-way heterogeneous HALP partition.
+
+    Per conv layer, K = N - 1 host zones of ``overlap_rows`` output rows are
+    interleaved with N secondary segments whose sizes follow ``ratios``
+    (default: equal; pass capacity weights for heterogeneous ESs).  Zone
+    boundaries are kept aligned to the strides of the pooling layers that
+    follow *before the next conv* (where the partition is re-balanced anyway),
+    so pools never cross a slot boundary (paper: "the host ES does not need to
+    send the output of the current CL ... for the pooling layer").  Pool
+    layers inherit the previous layer's boundaries divided by the stride.
+
+    The plan asserts that non-adjacent slots never need each other's rows:
+    all boundary traffic flows through the host's zones, as the scheme
+    requires (no secondary-secondary exchange).  Layers too thin to give
+    every secondary at least one alignment unit degrade gracefully: the
+    smaller-ratio secondaries own *zero* rows there (they idle for that
+    layer; the plan stays lossless and isolation still holds).  If even that
+    is impossible -- more zones than rows, or a thin slot would force a
+    secondary-secondary message -- the partitioner raises with the
+    remediation in the message rather than emitting a broken plan."""
+    secondaries = tuple(secondaries)
+    n_sec = len(secondaries)
+    if n_sec < 2:
+        raise ValueError("HALP needs at least two secondaries around the host")
+    if host in secondaries:
+        raise ValueError(f"host {host!r} cannot also be a secondary")
+    if ratios is None:
+        ratios = [1.0 / n_sec] * n_sec
+    if len(ratios) != n_sec:
+        raise ValueError("need one ratio per secondary")
+    total_ratio = sum(ratios)
+    if total_ratio <= 0 or any(r < 0 for r in ratios):
+        raise ValueError(f"ratios must be non-negative with a positive sum, got {ratios}")
+    ratios = [r / total_ratio for r in ratios]
+    k_zones = n_sec - 1
+    zone_names = (
+        (host,) if k_zones == 1 else tuple(f"{host}#{j}" for j in range(k_zones))
+    )
+    slots: list[str] = []
+    owners: list[str] = []
+    for j, s in enumerate(secondaries):
+        slots.append(s)
+        owners.append(s)
+        if j < k_zones:
+            slots.append(zone_names[j])
+            owners.append(host)
+
     sizes = net.sizes()
     parts: list[LayerPartition] = []
     for i, g in enumerate(net.layers):
         o = sizes[i + 1]
         if g.kind == "pool":
-            # pools inherit the previous layer's boundaries (divided by stride);
-            # choose the host zone as the pooled image of the previous host zone.
+            # pools inherit the previous layer's boundaries (divided by stride).
             prev = parts[-1].out
-            out = {
-                lo_name: Segment(1, prev[lo_name].hi // g.s),
-                host: Segment(prev[lo_name].hi // g.s + 1, prev[host].hi // g.s),
-                hi_name: Segment(prev[host].hi // g.s + 1, o),
-            }
+            out = {}
+            lo = 1
+            for j, slot in enumerate(slots):
+                hi = o if j == len(slots) - 1 else prev[slot].hi // g.s
+                out[slot] = Segment(lo, hi)
+                lo = hi + 1
         else:
-            w = min(overlap_rows, max(1, o - 2))
-            a = (o - w) // 2
-            # Align both host-zone boundaries to the strides of the pooling
-            # layers that follow *before the next conv* (where the partition is
-            # re-balanced anyway), so pools never cross a segment boundary.
-            align = 1
-            for h in net.layers[i + 1 :]:
-                if h.kind != "pool":
-                    break
-                align *= h.s
-            while align > max(1, o // 4):
-                align //= 2
-            if align > 1:
-                a = max(align, _align_down(a, align))
-                w = ((w + align - 1) // align) * align
-                w = min(w, max(1, o - a - 1))
-            out = {
-                lo_name: Segment(1, a),
-                host: Segment(a + 1, a + w),
-                hi_name: Segment(a + w + 1, o),
-            }
+            align = _pool_alignment(net, i, o)
+            counts = _conv_slot_rows(o, overlap_rows, ratios, align)
+            out = {}
+            lo = 1
+            for slot, cnt in zip(slots, counts):
+                out[slot] = Segment(lo, lo + cnt - 1)
+                lo += cnt
         inp = {
             es: (
                 Segment(*input_range_exact(seg.lo, seg.hi, g.k, g.s, g.p, sizes[i]))
@@ -189,9 +335,36 @@ def plan_halp(
             for es, seg in out.items()
         }
         parts.append(LayerPartition(index=i, out=out, inp=inp))
-    plan = HALPPlan(net=net, parts=tuple(parts), es_names=es_names)
-    _check_no_secondary_exchange(plan, lo_name, hi_name)
+    plan = HALPPlan(
+        net=net,
+        parts=tuple(parts),
+        es_names=tuple(slots),
+        host=host,
+        slot_owner=tuple(owners),
+    )
+    _check_no_slot_skip(plan)
     return plan
+
+
+def plan_halp_topology(
+    net: ConvNetGeom,
+    topology: "CollabTopology",
+    overlap_rows: int = 4,
+    ratios: Sequence[float] | None = None,
+) -> HALPPlan:
+    """HALP plan for a :class:`~repro.core.topology.CollabTopology`.
+
+    ``ratios`` defaults to the topology's compute-capacity weights (segment
+    sizes proportional to effective FLOP/s)."""
+    if ratios is None:
+        ratios = topology.capacity_ratios()
+    return plan_halp_n(
+        net,
+        secondaries=topology.secondaries,
+        host=topology.host,
+        overlap_rows=overlap_rows,
+        ratios=ratios,
+    )
 
 
 def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
@@ -215,12 +388,26 @@ def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
     return HALPPlan(net=net, parts=tuple(parts), es_names=names)
 
 
-def _check_no_secondary_exchange(plan: HALPPlan, lo_name: str, hi_name: str) -> None:
+def _check_no_slot_skip(plan: HALPPlan) -> None:
+    """Non-adjacent slots must never exchange rows.  In particular two
+    secondaries never talk directly -- all boundary traffic crosses a host
+    zone, the invariant the whole HALP schedule rests on."""
+    order = {s: j for j, s in enumerate(plan.es_names)}
     for i in range(len(plan.parts) - 1):
-        for a, b in ((lo_name, hi_name), (hi_name, lo_name)):
-            seg = plan.message(i, a, b)
-            if seg:
-                raise AssertionError(
-                    f"layer {i}: secondary {a} would need to send rows "
-                    f"{seg.lo}..{seg.hi} to {b}; widen the overlap zone"
-                )
+        for a in plan.es_names:
+            for b in plan.es_names:
+                if abs(order[a] - order[b]) <= 1:
+                    continue
+                if plan.owner_of(a) == plan.owner_of(b) == plan.host:
+                    # zone-to-zone rows never leave the host (a local move
+                    # across an ultra-thin secondary at a tiny feature map);
+                    # the host computes layers in submission order, so the
+                    # rows are always resident when needed.
+                    continue
+                seg = plan.message(i, a, b)
+                if seg:
+                    raise AssertionError(
+                        f"layer {i}: slot {a} would need to send rows "
+                        f"{seg.lo}..{seg.hi} to non-adjacent {b}; widen the "
+                        f"overlap zone or rebalance the segment ratios"
+                    )

@@ -2,11 +2,19 @@
 
 Two latency engines exist in this package:
 
-* this module -- the paper's *closed-form recursions* implemented verbatim
-  (eqs. 16-20 single task, eqs. 22-23 multi-task, plus the MoDNN baseline as the
-  paper describes it in §I/§V), and
+* this module -- the paper's *closed-form recursions* generalised to arbitrary
+  :class:`~repro.core.topology.CollabTopology` instances (eqs. 16-20 single
+  task, eqs. 22-23 multi-task, heterogeneous per-ES compute and per-link
+  communication terms, N secondaries with K = N - 1 host zones), plus the
+  MoDNN baseline as the paper describes it in §I/§V, and
 * ``repro.core.simulator`` -- an exact discrete-event simulation of the same
   job/message DAG, used as ground truth by the benchmarks.
+
+Both engines price the event topology produced by ``repro.core.events`` (one
+plan-walk, two consumers), so their cross-validation in
+``tests/test_schedule.py`` is structural, not coincidental.  For the paper's
+symmetric two-secondary setting the recursion below reproduces the original
+eqs. 16-20/22-23 term for term.
 
 Platform efficiency is *calibrated* against the paper's own anchor timings
 (§V.C: t_pre = 4.7 ms for VGG-16 on the GTX 1080TI; Table II: 124 fps on the
@@ -16,14 +24,17 @@ Tables II-III) is then *derived*, not fitted.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from typing import Sequence
 
-from .nets import ConvNetGeom, DTYPE_BYTES, vgg16_geom
-from .partition import E0, E1, E2, HALPPlan, plan_even, plan_halp
+from .events import final_bytes, init_bytes, resolve_halp_setup, sec_step, zone_step
+from .nets import ConvNetGeom, vgg16_geom
+from .partition import E0, E1, E2, HALPPlan, plan_even
+from .topology import CollabTopology, Link, Platform
 
 __all__ = [
     "Platform",
     "Link",
+    "CollabTopology",
     "GTX_1080TI",
     "AGX_XAVIER",
     "TPU_V5E",
@@ -32,24 +43,6 @@ __all__ = [
     "modnn_time",
     "speedup_ratio",
 ]
-
-
-@dataclass(frozen=True)
-class Platform:
-    name: str
-    peak_flops: float  # advertised peak (fp32 for the paper's GPUs)
-    eff_flops: float  # calibrated effective FLOP/s
-
-    def compute_time(self, flops: float) -> float:
-        return flops / self.eff_flops
-
-
-@dataclass(frozen=True)
-class Link:
-    rate_bps: float  # bits per second
-
-    def comm_time(self, nbytes: float) -> float:
-        return 8.0 * nbytes / self.rate_bps
 
 
 def _calibrated(name: str, peak: float, t_pre_vgg16: float) -> Platform:
@@ -77,83 +70,133 @@ def speedup_ratio(t: float, t_pre: float) -> float:
 
 
 def _init_bytes(plan: HALPPlan, es: str) -> float:
-    """Eq. (10): bytes of the initial image slice sent to a secondary ES."""
-    net = plan.net
-    seg = plan.parts[0].inp[es]
-    return DTYPE_BYTES * seg.rows * net.in_rows * net.in_channels
+    """Eq. (10) -- kept as an alias of ``events.init_bytes`` for callers."""
+    return init_bytes(plan, es)
 
 
 def halp_closed_form(
     net: ConvNetGeom,
-    platform: Platform,
-    link: Link,
-    overlap_rows: int = 4,
+    platform: Platform | None = None,
+    link: Link | None = None,
+    overlap_rows: int | None = None,
     n_tasks: int = 1,
+    topology: CollabTopology | None = None,
+    ratios: Sequence[float] | None = None,
+    plan: HALPPlan | None = None,
 ) -> dict:
-    """Paper eqs. (16)-(20) (single task) and (22)-(23) (multi-task).
+    """Paper eqs. (16)-(20) (single task) and (22)-(23) (multi-task), over an
+    arbitrary collaboration topology.
 
-    For ``n_tasks > 1`` the host processes the per-task overlap zones
-    sequentially within each layer (paper §IV.B) while K independent secondary
-    pairs compute; the recursion below is the paper's, with the host term
-    replaced by eq. (22).
+    The recursion runs over the plan's ordered slot list: every secondary
+    accumulates eq. (17) with its *own* platform and link rates, the host term
+    walks the K zones in row order (eq. 18 per zone for a single task, eq. (22)
+    with the zones' total for ``n_tasks > 1`` -- K independent secondary
+    groups compute while the host serves the per-task zones sequentially), and
+    eq. (19)/(20) close the recursion with per-link arrival times.  With the
+    symmetric two-secondary topology this is the paper's recursion verbatim.
     """
-    plan = plan_halp(net, overlap_rows=overlap_rows)
+    topology, plan = resolve_halp_setup(
+        net, platform, link, overlap_rows, topology, ratios, plan
+    )
+    host = plan.host
+    host_platform = topology.platform_of(host)
     n_layers = len(net.layers)
     width = net.sizes()
 
-    def cmp_rows(i: int, rows: int) -> float:
-        return platform.compute_time(net.layers[i].flops_per_out_row(width[i + 1]) * rows)
+    def cmp_rows(p: Platform, i: int, rows: int) -> float:
+        return p.compute_time(net.layers[i].flops_per_out_row(width[i + 1]) * rows)
 
-    # Per-layer ingredient times (identical for e1 and e2 up to a row).
-    T_sec = {E1: 0.0, E2: 0.0}  # eq. 17 accumulators
+    secs = plan.secondary_slots
+    zones = plan.zone_slots
+    T_sec = {s: 0.0 for s in secs}  # eq. 17 accumulators
     T_host = 0.0  # eq. 19 accumulator
     per_layer = []
     for i in range(n_layers):
         t_sec_arrival = {}
-        for ek in (E1, E2):
-            dep = plan.message(i, ek, E0)
-            own = plan.parts[i].out[ek]
-            t_cmp_dep = cmp_rows(i, dep.rows)
-            t_com_dep = link.comm_time(plan.message_bytes(i, ek, E0)) * n_tasks
-            t_cmp_rest = cmp_rows(i, own.rows - dep.rows)
-            t_int = link.comm_time(_init_bytes(plan, ek)) if i == 0 else 0.0
+        for s in secs:
+            step = sec_step(plan, i, s)
+            p_s = topology.platform_of(s)
+            up = topology.link_between(s, host)
+            t_cmp_dep = cmp_rows(p_s, i, step.dep_rows)
+            t_com_dep = up.comm_time(sum(nb for _, _, nb in step.sends)) * n_tasks
+            t_cmp_rest = cmp_rows(p_s, i, step.own_rows - step.dep_rows)
+            t_int = (
+                topology.link_between(host, s).comm_time(init_bytes(plan, s))
+                if i == 0
+                else 0.0
+            )
             # eq. (16)
             t_layer = t_int + t_cmp_dep + max(t_com_dep, t_cmp_rest)
-            prev = T_sec[ek]
-            T_sec[ek] = prev + t_layer  # eq. (17)
-            # arrival of ek's boundary rows at the host (second term of eq. 19)
-            t_sec_arrival[ek] = prev + t_int + t_cmp_dep + t_com_dep
-        # host term: eq. (18) single task, eq. (22) multi-task
-        m1 = plan.message(i, E0, E1)
-        zone = plan.parts[i].out[E0]
-        t_cmp_a = cmp_rows(i, m1.rows)
-        t_cmp_b = cmp_rows(i, zone.rows - m1.rows)
-        t_com_1 = link.comm_time(plan.message_bytes(i, E0, E1))
-        t_com_2 = link.comm_time(plan.message_bytes(i, E0, E2))
+            prev = T_sec[s]
+            T_sec[s] = prev + t_layer  # eq. (17)
+            # arrival of s's boundary rows at the host (second term of eq. 19)
+            t_sec_arrival[s] = prev + t_int + t_cmp_dep + t_com_dep
+        # host term: eq. (18) single task, eq. (22) multi-task, summed over zones
         if i == n_layers - 1:
-            t_host = cmp_rows(i, zone.rows)
+            t_host = sum(cmp_rows(host_platform, i, plan.parts[i].out[z].rows) for z in zones)
         elif n_tasks == 1:
-            t_host = t_cmp_a + max(t_com_1, t_cmp_b + t_com_2)  # eq. (18)
+            if len(zones) == 1:
+                # eq. (18) verbatim (the paper's two-secondary form)
+                step = zone_step(plan, i, zones[0])
+                t_cmp_a = cmp_rows(host_platform, i, step.rows_for_above)
+                t_cmp_b = cmp_rows(host_platform, i, step.zone_rows - step.rows_for_above)
+                t_com_1 = topology.link_between(host, step.above).comm_time(step.bytes_to_above)
+                t_com_2 = topology.link_between(host, step.below).comm_time(step.bytes_to_below)
+                t_host = t_cmp_a + max(t_com_1, t_cmp_b + t_com_2)
+            else:
+                # K zones: the host computes chunks in row order and each
+                # chunk's send overlaps all later chunks (non-blocking NIC),
+                # so the busy time is the list-scheduling makespan
+                # max_q (sum_{r<=q} cmp_r + com_q) -- eq. (18) generalised.
+                cum = 0.0
+                t_host = 0.0
+                for z in zones:
+                    step = zone_step(plan, i, z)
+                    cum += cmp_rows(host_platform, i, step.rows_for_above)
+                    t_host = max(
+                        t_host,
+                        cum
+                        + topology.link_between(host, step.above).comm_time(
+                            step.bytes_to_above
+                        ),
+                    )
+                    cum += cmp_rows(
+                        host_platform, i, step.zone_rows - step.rows_for_above
+                    )
+                    t_host = max(
+                        t_host,
+                        cum
+                        + topology.link_between(host, step.below).comm_time(
+                            step.bytes_to_below
+                        ),
+                    )
         else:
-            # eq. (22): K tasks' overlap zones computed sequentially; the m-th
-            # pair's send starts after the first m zone computations.
-            t_zone = t_cmp_a + t_cmp_b
-            t_host = max(
-                m * t_zone + max(t_com_1, t_com_2) for m in range(1, n_tasks + 1)
-            )
+            # eq. (22): the per-task zones are computed sequentially; the m-th
+            # group's sends start after the first m zone-sets are done.
+            t_zone = sum(cmp_rows(host_platform, i, plan.parts[i].out[z].rows) for z in zones)
+            t_com_max = 0.0
+            for z in zones:
+                step = zone_step(plan, i, z)
+                t_com_max = max(
+                    t_com_max,
+                    topology.link_between(host, step.above).comm_time(step.bytes_to_above),
+                    topology.link_between(host, step.below).comm_time(step.bytes_to_below),
+                )
+            t_host = max(m * t_zone + t_com_max for m in range(1, n_tasks + 1))
         # eq. (19)
         T_host = max(t_host + T_host, max(t_sec_arrival.values()))
-        per_layer.append(
-            dict(layer=net.layers[i].name, T_host=T_host, T_e1=T_sec[E1], T_e2=T_sec[E2])
-        )
+        entry = dict(layer=net.layers[i].name, T_host=T_host)
+        entry.update({f"T_{s}": T_sec[s] for s in secs})
+        per_layer.append(entry)
 
     # g_N: secondaries ship their full sub-outputs to the host (eqs. 13-14),
     # which merges them and runs the head (FLs).
     t_final_com = max(
-        link.comm_time(plan.message_bytes(n_layers - 1, ek, E0)) for ek in (E1, E2)
-    ) * n_tasks
+        topology.link_between(s, host).comm_time(final_bytes(plan, s)) * n_tasks
+        for s in secs
+    )
     T_gn = max(T_host, max(T_sec.values()) + t_final_com)  # eq. (20)
-    t_head = platform.compute_time(net.head_flops) * n_tasks
+    t_head = host_platform.compute_time(net.head_flops) * n_tasks
     total = T_gn + t_head  # eq. (15)
     return dict(total=total, per_layer=per_layer, plan=plan)
 
@@ -177,10 +220,7 @@ def modnn_time(
     names = plan.es_names
     host = names[0]
     # initial scatter of the image slices to the n-1 non-host workers
-    total += sum(
-        link.comm_time(DTYPE_BYTES * plan.parts[0].inp[w].rows * net.in_rows * net.in_channels)
-        for w in names[1:]
-    )
+    total += sum(link.comm_time(init_bytes(plan, w)) for w in names[1:])
     for i in range(len(net.layers)):
         cmp = max(
             platform.compute_time(

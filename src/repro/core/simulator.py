@@ -10,18 +10,23 @@ links.  This module simulates that DAG exactly:
   dependencies have finished,
 * the makespan of the sink job is the inference time.
 
-Benchmarks use this engine; ``tests/test_schedule.py`` cross-validates it
-against the closed forms.  The same engine doubles as the straggler /
-fault-injection harness of the runtime (``repro.runtime.fault``): per-resource
-slowdown factors and message-drop retries model node degradation at scale.
+The HALP DAG itself is laid out by ``repro.core.events.build_halp_dag`` -- the
+same plan-walk the closed form prices -- so the two engines cross-validate on
+identical structure (``tests/test_schedule.py``).  Arbitrary
+:class:`~repro.core.topology.CollabTopology` instances are supported: N
+secondaries, per-ES platforms, per-link rates.  The same engine doubles as the
+straggler / fault-injection harness of the runtime (``repro.runtime.fault``):
+per-resource slowdown factors model node degradation at scale.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from typing import Sequence
 
-from .nets import ConvNetGeom, DTYPE_BYTES
-from .partition import E0, E1, E2, HALPPlan, plan_even, plan_halp
-from .schedule import Link, Platform
+from .events import build_halp_dag, init_bytes, resolve_halp_setup
+from .nets import ConvNetGeom
+from .partition import HALPPlan, plan_even
+from .topology import CollabTopology, Link, Platform
 
 __all__ = ["Sim", "Job", "simulate_halp", "simulate_modnn", "enhanced_modnn_delay"]
 
@@ -80,135 +85,42 @@ def _chunk_time(net: ConvNetGeom, platform: Platform, i: int, rows: int) -> floa
 
 def simulate_halp(
     net: ConvNetGeom,
-    platform: Platform,
-    link: Link,
-    overlap_rows: int = 4,
+    platform: Platform | None = None,
+    link: Link | None = None,
+    overlap_rows: int | None = None,
     n_tasks: int = 1,
     host_platform: Platform | None = None,
     slowdown: dict[str, float] | None = None,
+    topology: CollabTopology | None = None,
+    ratios: Sequence[float] | None = None,
+    plan: HALPPlan | None = None,
 ) -> dict:
-    """Simulate HALP for ``n_tasks`` tasks on 2*n_tasks secondaries + one host.
+    """Simulate HALP for ``n_tasks`` tasks on N*n_tasks secondaries + one host.
 
-    Resources: ``e0`` (host compute), ``e{k}^{t}`` (secondary compute),
-    ``link:a->b`` (directed point-to-point links; Ethernet full duplex).  The
-    host serves the per-task overlap zones in task order within each layer
-    (paper §IV.B).  ``slowdown`` maps resource name -> multiplicative factor
-    (straggler injection).
+    Two calling conventions:
+
+    * paper-style: ``simulate_halp(net, platform, link, ...)`` -- the symmetric
+      two-secondary triple with one shared platform/link (``host_platform``
+      optionally differing), exactly the paper's setting;
+    * topology-style: ``simulate_halp(net, topology=topo, ...)`` -- arbitrary
+      N-way heterogeneous clusters with per-ES platforms and per-link rates;
+      ``ratios`` overrides the capacity-weighted segment split and ``plan``
+      overrides the plan entirely.
+
+    Resources: the host ES name (host compute), ``{slot}^{t}`` (secondary
+    compute), ``link:a->b`` (directed point-to-point links; Ethernet full
+    duplex).  The host serves the per-task zones in task order within each
+    layer (paper §IV.B).  ``slowdown`` maps resource name -> multiplicative
+    factor (straggler injection).
     """
-    host_platform = host_platform or platform
-    plans = [plan_halp(net, overlap_rows=overlap_rows) for _ in range(n_tasks)]
+    topology, plan = resolve_halp_setup(
+        net, platform, link, overlap_rows, topology, ratios, plan, host_platform
+    )
+    plans = [plan for _ in range(n_tasks)]
     sim = Sim()
     if slowdown:
         sim.slowdown.update(slowdown)
-    n_layers = len(net.layers)
-
-    # job-id bookkeeping: last compute chunk per (task, es) per layer, and the
-    # message that es needs before starting layer i.  The host gets one inbox
-    # slot per source secondary, so its top chunk only waits for e1's rows and
-    # its bottom chunk only for e2's.
-    last_chunk: dict[tuple[int, str], int | None] = {}
-    inbox: dict[tuple[int, str, int], int | None] = {}  # (task, es, layer) -> msg job
-    host_inbox: dict[tuple[int, int, str], int | None] = {}  # (task, layer, src)
-
-    def sec(t: int, ek: str) -> str:
-        return f"{ek}^{t}"
-
-    # initial image distribution host -> secondaries (eq. 10)
-    for t in range(n_tasks):
-        plan = plans[t]
-        for ek in (E1, E2):
-            nbytes = DTYPE_BYTES * plan.parts[0].inp[ek].rows * net.in_rows * net.in_channels
-            jid = sim.add(
-                f"int[{t}]{ek}", f"link:e0->{sec(t, ek)}", link.comm_time(nbytes)
-            )
-            inbox[(t, ek, 0)] = jid
-        inbox[(t, E0, 0)] = None
-
-    for i in range(n_layers):
-        # --- secondaries: dep chunk first, then rest; send dep while resting.
-        for t in range(n_tasks):
-            plan = plans[t]
-            for ek in (E1, E2):
-                own = plan.parts[i].out[ek]
-                dep = plan.message(i, ek, E0)
-                deps = [last_chunk.get((t, ek)), inbox.get((t, ek, i))]
-                a = sim.add(
-                    f"cmp[{t}]{ek}.g{i}.dep",
-                    sec(t, ek),
-                    _chunk_time(net, platform, i, dep.rows),
-                    deps,
-                )
-                m = sim.add(
-                    f"msg[{t}]{ek}->e0.g{i}",
-                    f"link:{sec(t, ek)}->e0",
-                    link.comm_time(plan.message_bytes(i, ek, E0)),
-                    [a],
-                )
-                b = sim.add(
-                    f"cmp[{t}]{ek}.g{i}.rest",
-                    sec(t, ek),
-                    _chunk_time(net, platform, i, own.rows - dep.rows),
-                    [a],
-                )
-                last_chunk[(t, ek)] = b
-                if i + 1 < n_layers:
-                    host_inbox[(t, i + 1, ek)] = m  # host needs this before layer i+1
-        # --- host: per task (in order): chunk for e1, send; chunk rest, send to e2.
-        for t in range(n_tasks):
-            plan = plans[t]
-            zone = plan.parts[i].out[E0]
-            m1 = plan.message(i, E0, E1)
-            deps = [last_chunk.get((t, E0)), host_inbox.get((t, i, E1))]
-            a = sim.add(
-                f"cmp[{t}]e0.g{i}.for_e1",
-                E0,
-                _chunk_time(net, host_platform, i, m1.rows),
-                deps,
-            )
-            s1 = sim.add(
-                f"msg[{t}]e0->e1.g{i}",
-                f"link:e0->{sec(t, E1)}",
-                link.comm_time(plan.message_bytes(i, E0, E1)),
-                [a],
-            )
-            b = sim.add(
-                f"cmp[{t}]e0.g{i}.rest",
-                E0,
-                _chunk_time(net, host_platform, i, zone.rows - m1.rows),
-                [a, host_inbox.get((t, i, E2))],
-            )
-            s2 = sim.add(
-                f"msg[{t}]e0->e2.g{i}",
-                f"link:e0->{sec(t, E2)}",
-                link.comm_time(plan.message_bytes(i, E0, E2)),
-                [b],
-            )
-            last_chunk[(t, E0)] = b
-            if i + 1 < n_layers:
-                inbox[(t, E1, i + 1)] = s1
-                inbox[(t, E2, i + 1)] = s2
-            # NOTE: the host->e0 "message" is local (no job).
-
-    # final merge: secondaries ship their g_N sub-outputs; host runs the head.
-    heads = []
-    for t in range(n_tasks):
-        plan = plans[t]
-        merged = []
-        for ek in (E1, E2):
-            m = sim.add(
-                f"final[{t}]{ek}->e0",
-                f"link:{sec(t, ek)}->e0",
-                link.comm_time(plan.message_bytes(n_layers - 1, ek, E0)),
-                [last_chunk[(t, ek)]],
-            )
-            merged.append(m)
-        h = sim.add(
-            f"head[{t}]",
-            E0,
-            host_platform.compute_time(net.head_flops),
-            merged + [last_chunk[(t, E0)]],
-        )
-        heads.append(h)
+    heads = build_halp_dag(sim, plans, topology)
     makespan = sim.run()
     finishes = [sim.finish_of(h) for h in heads]
     return dict(
@@ -216,6 +128,7 @@ def simulate_halp(
         per_task_finish=finishes,
         avg_delay=sum(finishes) / len(finishes),
         sim=sim,
+        plan=plan,
     )
 
 
@@ -239,8 +152,9 @@ def simulate_modnn(
     gate: dict[str, int | None] = {}  # message that worker w waits on before layer i
 
     for w in names[1:]:
-        nbytes = DTYPE_BYTES * plan.parts[0].inp[w].rows * net.in_rows * net.in_channels
-        gate[w] = sim.add(f"int.{w}", f"link:{host}->{w}", link.comm_time(nbytes))
+        gate[w] = sim.add(
+            f"int.{w}", f"link:{host}->{w}", link.comm_time(init_bytes(plan, w))
+        )
     gate[host] = None
 
     for i in range(n_layers):

@@ -1,0 +1,121 @@
+"""Collaboration topology: which ESs collaborate, at what speeds, over what links.
+
+The paper's §IV scheme is presented for one symmetric triple (two identical
+secondary ESs around one host), but nothing in the receptive-field algebra
+requires that.  :class:`CollabTopology` captures the general case:
+
+* an ordered list of *secondary* ESs (their order is their position along the
+  partitioned row axis),
+* one designated *host* ES that owns every overlapping zone and relays all
+  boundary traffic (the no-secondary-exchange invariant), and
+* per-ES compute :class:`Platform`\\ s and *directed* per-pair :class:`Link`
+  rates (uplink and downlink of an ES may differ).
+
+All four engines consume it: the partitioner derives capacity-weighted segment
+ratios from it, the closed-form recursion and the discrete-event simulator
+charge per-ES compute and per-link communication from it, and the optimizer
+searches plan knobs against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+__all__ = ["Platform", "Link", "CollabTopology"]
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    peak_flops: float  # advertised peak (fp32 for the paper's GPUs)
+    eff_flops: float  # calibrated effective FLOP/s
+
+    def compute_time(self, flops: float) -> float:
+        return flops / self.eff_flops
+
+    def scaled(self, factor: float, name: str | None = None) -> "Platform":
+        """A platform ``factor`` x as fast (heterogeneous-cluster modelling)."""
+        return Platform(
+            name=name or f"{self.name} x{factor:g}",
+            peak_flops=self.peak_flops * factor,
+            eff_flops=self.eff_flops * factor,
+        )
+
+
+@dataclass(frozen=True)
+class Link:
+    rate_bps: float  # bits per second
+
+    def comm_time(self, nbytes: float) -> float:
+        return 8.0 * nbytes / self.rate_bps
+
+
+@dataclass(frozen=True)
+class CollabTopology:
+    """One host + N ordered secondaries with per-ES platforms and per-link rates.
+
+    ``links`` maps directed ``(src, dst)`` ES-name pairs to :class:`Link`;
+    pairs not listed fall back to ``default_link``.  ``secondaries`` are
+    ordered along the partitioned row axis (first name owns the topmost
+    segment).
+    """
+
+    host: str
+    secondaries: tuple[str, ...]
+    platforms: Mapping[str, Platform]
+    links: Mapping[tuple[str, str], Link] = field(default_factory=dict)
+    default_link: Link | None = None
+
+    def __post_init__(self) -> None:
+        if len(self.secondaries) < 1:
+            raise ValueError("need at least one secondary ES")
+        if self.host in self.secondaries:
+            raise ValueError(f"host {self.host!r} cannot also be a secondary")
+        for es in (self.host, *self.secondaries):
+            if es not in self.platforms:
+                raise ValueError(f"no platform for ES {es!r}")
+
+    @property
+    def n_secondaries(self) -> int:
+        return len(self.secondaries)
+
+    @property
+    def es_names(self) -> tuple[str, ...]:
+        return (self.host, *self.secondaries)
+
+    def platform_of(self, es: str) -> Platform:
+        return self.platforms[es]
+
+    def link_between(self, src: str, dst: str) -> Link:
+        link = self.links.get((src, dst), self.default_link)
+        if link is None:
+            raise KeyError(f"no link {src!r} -> {dst!r} and no default_link")
+        return link
+
+    def capacity_ratios(self) -> tuple[float, ...]:
+        """Secondary segment ratios proportional to effective FLOP/s.
+
+        This is the DistrEdge-style capacity-aware starting point; the
+        optimizer refines it further when link rates are also asymmetric."""
+        eff = [self.platforms[s].eff_flops for s in self.secondaries]
+        total = sum(eff)
+        return tuple(e / total for e in eff)
+
+    @staticmethod
+    def symmetric(
+        platform: Platform,
+        link: Link,
+        n_secondaries: int = 2,
+        host_platform: Platform | None = None,
+        host: str = "e0",
+    ) -> "CollabTopology":
+        """The paper's setting: identical secondaries, one shared link rate.
+
+        For ``n_secondaries=2`` the ES names are the paper's ``(e1, e0, e2)``;
+        larger clusters get ``e1..eN`` around the same host."""
+        names = tuple(f"e{j}" for j in range(1, n_secondaries + 1))
+        platforms = {host: host_platform or platform}
+        platforms.update({s: platform for s in names})
+        return CollabTopology(
+            host=host, secondaries=names, platforms=platforms, default_link=link
+        )

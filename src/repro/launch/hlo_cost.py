@@ -58,9 +58,14 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # result type is either a tuple "( ... )" (may contain /*index=N*/ comments but
 # never nested parens) or a single array type (no parens/spaces).
 _OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^()]*\)|[^\s(]+)\s+([\w\-]+)\((.*)$"
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^()]*\)|[^\s(]+)\s+([\w\-]+)\((.*)$"
 )
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _canon(name: str) -> str:
+    """Normalise an op/computation name to the %-prefixed form."""
+    return name if name.startswith("%") else "%" + name
 
 
 def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
@@ -124,7 +129,7 @@ def _parse(text: str) -> tuple[dict, str, dict]:
         if cur is None:
             m = _COMP_RE.match(line.strip())
             if m:
-                cur = _Comp(m.group(1))
+                cur = _Comp(_canon(m.group(1)))
                 if line.lstrip().startswith("ENTRY"):
                     entry = cur.name
                 comps[cur.name] = cur
@@ -135,7 +140,7 @@ def _parse(text: str) -> tuple[dict, str, dict]:
             continue
         m = _OP_RE.match(s)
         if m:
-            op = _Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            op = _Op(_canon(m.group(1)), m.group(2), m.group(3), m.group(4))
             cur.ops.append(op)
             types[op.name] = op.result_type
     return comps, entry, types
@@ -143,23 +148,45 @@ def _parse(text: str) -> tuple[dict, str, dict]:
 
 def _operands(rest: str) -> list[str]:
     """Operand op-names from the call parentheses.  ``rest`` starts just
-    *after* the opening paren (consumed by _OP_RE), i.e. at depth 1."""
-    depth = 1
-    out = []
-    buf = []
+    *after* the opening paren (consumed by _OP_RE), i.e. at paren depth 1.
+
+    Newer XLA prints operands with their full types, e.g.
+    ``dot(f32[8,16]{1,0} %Arg_0.1, f32[16,4]{1,0} %Arg_1.2)``, so the split
+    must ignore commas nested in ``{}``/``[]`` (layouts, shapes) and the
+    operand name is the *last* whitespace token of each piece."""
+    paren = 1
+    nest = 0  # {} / [] nesting inside the operand list
+    pieces: list[str] = []
+    buf: list[str] = []
     for ch in rest:
         if ch == "(":
-            depth += 1
+            paren += 1
         elif ch == ")":
-            depth -= 1
-            if depth == 0:
+            paren -= 1
+            if paren == 0:
                 break
-        if depth >= 1:
-            buf.append(ch)
-    for tok in "".join(buf).split(","):
-        tok = tok.strip()
-        if tok.startswith("%"):
-            out.append(tok)
+        elif ch in "{[":
+            nest += 1
+        elif ch in "}]":
+            nest -= 1
+        elif ch == "," and paren == 1 and nest == 0:
+            pieces.append("".join(buf))
+            buf = []
+            continue
+        buf.append(ch)
+    if buf:
+        pieces.append("".join(buf))
+    out = []
+    for piece in pieces:
+        toks = piece.split()
+        if not toks:
+            continue
+        name = toks[-1]
+        if name.startswith("%"):
+            out.append(name)
+        elif re.fullmatch(r"[\w.\-]+", name) and not _SHAPE_RE.fullmatch(name):
+            # operand printed without the % sigil (newer HLO dumps)
+            out.append("%" + name)
     return out
 
 
@@ -230,9 +257,9 @@ def analyze_hlo(text: str) -> HLOCost:
     for comp in comps.values():
         for op in comp.ops:
             if op.opcode == "fusion":
-                m = re.search(r"calls=(%[\w.\-]+)", op.rest)
+                m = re.search(r"calls=(%?[\w.\-]+)", op.rest)
                 if m:
-                    fused.add(m.group(1))
+                    fused.add(_canon(m.group(1)))
 
     cache: dict[str, HLOCost] = {}
 
@@ -259,15 +286,15 @@ def analyze_hlo(text: str) -> HLOCost:
                     trip = int(m2.group(1)) if m2 else 1
                     if m2 is None:
                         total.unknown_trip_whiles += 1
-                body = re.search(r"body=(%[\w.\-]+)", op.rest)
-                cond = re.search(r"condition=(%[\w.\-]+)", op.rest)
+                body = re.search(r"body=(%?[\w.\-]+)", op.rest)
+                cond = re.search(r"condition=(%?[\w.\-]+)", op.rest)
                 for ref, mult in ((body, trip), (cond, trip + 1)):
                     if ref:
-                        total._merge_scaled(cost_of(ref.group(1), stack + (name,)), mult)
+                        total._merge_scaled(cost_of(_canon(ref.group(1)), stack + (name,)), mult)
                 continue
             if op.opcode in ("call", "conditional", "async-start"):
-                for ref in re.finditer(r"(?:to_apply|calls|branch_computations=\{?)=?(%[\w.\-]+)", op.rest):
-                    total._merge_scaled(cost_of(ref.group(1), stack + (name,)), 1)
+                for ref in re.finditer(r"(?:to_apply|calls|branch_computations=\{?)=?(%?[\w.\-]+)", op.rest):
+                    total._merge_scaled(cost_of(_canon(ref.group(1)), stack + (name,)), 1)
                 # fall through to count the call site's own bytes
             # flops
             if op.opcode == "dot":
@@ -275,9 +302,9 @@ def analyze_hlo(text: str) -> HLOCost:
             elif op.opcode == "convolution":
                 total.flops += _conv_flops(op, types)
             elif op.opcode == "fusion":
-                m = re.search(r"calls=(%[\w.\-]+)", op.rest)
+                m = re.search(r"calls=(%?[\w.\-]+)", op.rest)
                 if m:
-                    sub = cost_of(m.group(1), stack + (name,))
+                    sub = cost_of(_canon(m.group(1)), stack + (name,))
                     total.flops += sub.flops  # dots inside fusions still count
             # bytes (XLA-style: slicing ops touch only the slice; loop/tuple
             # plumbing moves nothing -- the body ops account their own reads;

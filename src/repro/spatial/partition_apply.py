@@ -1,12 +1,18 @@
 """Execute a HALP plan segment-by-segment and verify losslessness (paper §II-§IV).
 
-This is the paper's collaboration scheme as *executable dataflow*: each ES's
+This is the paper's collaboration scheme as *executable dataflow*: each slot's
 feature rows are materialised separately, and the input of every layer segment
-is reconstructed **strictly** from (a) rows the ES computed itself and (b) the
-inter-ES messages the plan prescribes (eqs. 10-14 / exact range algebra).  If
-the plan's messages were insufficient, reconstruction would fail loudly --
+is reconstructed **strictly** from (a) rows the slot computed itself and (b)
+the inter-slot messages the plan prescribes (eqs. 10-14 / exact range algebra).
+If the plan's messages were insufficient, reconstruction would fail loudly --
 so equality with the single-device reference proves both the receptive-field
 partitioning *and* the message algebra.
+
+The executor is topology-agnostic: it walks ``plan.es_names`` generically, so
+the same code runs the paper's symmetric ``(e1, e0, e2)`` triple, N-way
+capacity-weighted heterogeneous plans (``plan_halp_n`` with skewed ratios and
+multiple host zones), and the even splits of the TPU spatial engine.  This is
+the correctness backstop for every plan the optimizer may propose.
 
 Runs on a single device (no shard_map): this is the semantic model. The SPMD
 deployment form lives in ``repro.spatial.halo``.

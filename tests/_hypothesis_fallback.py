@@ -1,0 +1,135 @@
+"""Deterministic fallback for the subset of ``hypothesis`` this suite uses.
+
+The container image may not ship ``hypothesis``; rather than skip five whole
+test modules, this shim re-implements the small API surface they need
+(``given``, ``settings``, ``strategies.integers/sampled_from/data``) as a
+seeded pseudo-random example driver.  It has no shrinking and no database --
+it simply runs each property ``max_examples`` times with reproducible draws,
+which preserves the tests' bug-finding power for regressions while keeping
+collection green.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # pragma: no cover - exercised only without hypothesis
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label=""):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"_Strategy({self._label})"
+
+
+class _DataObject:
+    """Mimics hypothesis' ``data()`` object: interactive draws inside the test."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng), "data()")
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.randint(min_value, max_value),
+            f"integers({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))], "sampled_from")
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        return _Strategy(
+            lambda rng: rng.uniform(min_value, max_value),
+            f"floats({min_value}, {max_value})",
+        )
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Records ``max_examples`` on the decorated function (deadline ignored)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Runs the test once per example with deterministic per-example seeds.
+
+    Positional strategies map onto the test function's parameters in order,
+    keyword strategies by name (matching hypothesis' behaviour for the simple
+    signatures this suite uses).
+    """
+
+    def deco(fn):
+        params = [
+            p.name
+            for p in inspect.signature(fn).parameters.values()
+            if p.kind in (p.POSITIONAL_OR_KEYWORD, p.POSITIONAL_ONLY)
+        ]
+        mapping = dict(zip(params, arg_strategies))
+        mapping.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            for ex in range(n):
+                # crc32 is stable across processes (unlike str hash, which is
+                # salted), so a falsifying example number is replayable
+                rng = random.Random((zlib.crc32(fn.__qualname__.encode()) << 32) | ex)
+                kwargs = {name: strat.draw(rng) for name, strat in mapping.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:  # noqa: BLE001 - re-raise with the example
+                    raise AssertionError(
+                        f"falsifying example (#{ex}): {fn.__name__}({kwargs!r})"
+                    ) from e
+
+        # strip the now-bound parameters so pytest doesn't see fixtures
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -38,6 +38,25 @@ def test_table3_reproduction_quality():
         assert abs(ours - paper) < 2e-3, (key, ours, paper)
 
 
+def test_table4_optimizer_beats_equal_split():
+    """The heterogeneous-cluster optimizer must clearly beat the naive equal
+    split (acceptance criterion of the N-way refactor)."""
+    out = paper_tables.table4_heterogeneous_optimizer()
+    assert out["optimized"] < 0.75 * out["equal"]
+    assert out["gain"] > 0.3
+
+
+def test_hetero_sweep_monotone_gain():
+    """Optimizer gain grows with cluster asymmetry; N-way scaling helps."""
+    from benchmarks import hetero_sweep
+
+    pairs = hetero_sweep.sweep_heterogeneous_pairs()
+    gains = [v["gain"] for v in pairs.values()]
+    assert all(b >= a - 0.02 for a, b in zip(gains, gains[1:])), gains
+    nway = hetero_sweep.sweep_nway_scaling()
+    assert nway[3]["speedup"] > nway[2]["speedup"]
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""

@@ -1,6 +1,9 @@
 """Property tests on the scheduling core + config registry invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     GTX_1080TI,

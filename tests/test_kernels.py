@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.attention import attention_ref, flash_attention, gqa_flash
 from repro.kernels.conv2d import conv2d_pallas, conv2d_ref

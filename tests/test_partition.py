@@ -1,6 +1,9 @@
 """Partitioner tests (paper §III eqs. 5-9 + HALP plan invariants)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.nets import vgg16_geom
 from repro.core.partition import E0, E1, E2, Segment, plan_even, plan_halp, split_rows

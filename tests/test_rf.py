@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 from fractions import Fraction
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.rf import (
     LayerGeom,

@@ -55,6 +55,44 @@ def test_halp_plan_lossless_other_overlaps(vgg_setup):
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize(
+    "secs,ratios",
+    [
+        (("e1", "e2", "e3"), None),
+        (("e1", "e2", "e3"), (0.5, 0.3, 0.2)),
+        (("fast", "slow"), (0.72, 0.28)),
+        (("a", "b", "c", "d"), (0.4, 0.3, 0.2, 0.1)),
+    ],
+)
+def test_nway_heterogeneous_plan_lossless(vgg_setup, secs, ratios):
+    """The executable-losslessness backstop for the N-way refactor: capacity-
+    weighted heterogeneous plans (multiple host zones, skewed segments) run
+    through the same executor and still match single-device inference."""
+    from repro.core.partition import plan_halp_n
+
+    params, x, ref = vgg_setup
+    plan = plan_halp_n(CFG.geom(), secondaries=secs, ratios=ratios, overlap_rows=4)
+    out = run_plan(plan, params["features"], vgg.apply_layer, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_optimizer_chosen_plan_lossless(vgg_setup):
+    """Whatever plan the optimizer proposes must execute losslessly."""
+    from repro.core import CollabTopology, GTX_1080TI, Link, optimize_plan
+
+    params, x, ref = vgg_setup
+    slow = GTX_1080TI.scaled(0.4, "slow")
+    topo = CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        default_link=Link(10e9),
+    )
+    res = optimize_plan(CFG.geom(), topo, overlap_choices=(2, 4), max_rounds=3)
+    out = run_plan(res.plan, params["features"], vgg.apply_layer, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
 def test_halo_sizes():
     assert halo_sizes(3, 1, 1) == (1, 1)
     assert halo_sizes(1, 1, 0) == (0, 0)

@@ -1,0 +1,340 @@
+"""N-way heterogeneous HALP: topology plumbing, seed regression pins,
+losslessness of optimizer-shaped plans, closed form vs. simulator on
+asymmetric clusters, and split_rows edge cases."""
+import math
+
+import pytest
+
+from repro.core import (
+    GTX_1080TI,
+    AGX_XAVIER,
+    CollabTopology,
+    Link,
+    Platform,
+    equal_ratios,
+    evaluate_plan,
+    halp_closed_form,
+    optimize_plan,
+    plan_halp,
+    plan_halp_n,
+    plan_halp_topology,
+    simulate_halp,
+    split_rows,
+    vgg16_geom,
+)
+from repro.core.partition import Segment
+
+NET = vgg16_geom()
+
+# ---------------------------------------------------------------------------
+# regression pins: the generalised engines must reproduce the seed (3-ES,
+# equal-split) implementation EXACTLY -- segments, closed form, and simulator.
+# Values captured from the pre-refactor implementation at commit 6c503ba.
+# ---------------------------------------------------------------------------
+
+SEED_SEGMENTS = [
+    ((1, 110), (111, 114), (115, 224)),
+    ((1, 110), (111, 114), (115, 224)),
+    ((1, 55), (56, 57), (58, 112)),
+    ((1, 54), (55, 58), (59, 112)),
+    ((1, 54), (55, 58), (59, 112)),
+    ((1, 27), (28, 29), (30, 56)),
+    ((1, 26), (27, 30), (31, 56)),
+    ((1, 26), (27, 30), (31, 56)),
+    ((1, 26), (27, 30), (31, 56)),
+    ((1, 13), (14, 15), (16, 28)),
+    ((1, 12), (13, 16), (17, 28)),
+    ((1, 12), (13, 16), (17, 28)),
+    ((1, 12), (13, 16), (17, 28)),
+    ((1, 6), (7, 8), (9, 14)),
+    ((1, 5), (6, 9), (10, 14)),
+    ((1, 5), (6, 9), (10, 14)),
+    ((1, 4), (5, 8), (9, 14)),
+    ((1, 2), (3, 4), (5, 7)),
+]
+
+SEED_TOTALS = {
+    ("GTX 1080TI", 40e9): (0.0022701472675424237, 0.002231829963287529, 0.002853283601028227),
+    ("GTX 1080TI", 100e9): (0.0021964960675424235, 0.0021785509596849535, 0.002810598161028227),
+    ("JETSON AGX Xavier", 40e9): (0.014861223294045456, 0.01481812758713077, 0.01916614034803174),
+    ("JETSON AGX Xavier", 100e9): (0.014787572094045456, 0.01477200150713077, 0.01912345490803174),
+}
+
+
+def test_symmetric_plan_matches_seed_segments_exactly():
+    plan = plan_halp(NET, overlap_rows=4)
+    assert plan.es_names == ("e1", "e0", "e2")
+    assert plan.host == "e0"
+    assert plan.secondary_slots == ("e1", "e2")
+    assert plan.zone_slots == ("e0",)
+    for i, part in enumerate(plan.parts):
+        got = tuple((part.out[e].lo, part.out[e].hi) for e in ("e1", "e0", "e2"))
+        assert got == SEED_SEGMENTS[i], (i, got)
+
+
+def test_symmetric_engines_match_seed_totals_exactly():
+    """Closed-form total and simulator makespans (1 and 4 tasks) are
+    bit-identical to the pre-refactor implementation."""
+    for plat in (GTX_1080TI, AGX_XAVIER):
+        for rate in (40e9, 100e9):
+            cf = halp_closed_form(NET, plat, Link(rate))["total"]
+            ev = simulate_halp(NET, plat, Link(rate))["total"]
+            ev4 = simulate_halp(NET, plat, Link(rate), n_tasks=4)["total"]
+            want = SEED_TOTALS[(plat.name, rate)]
+            assert (cf, ev, ev4) == want, (plat.name, rate)
+
+
+# ---------------------------------------------------------------------------
+# topology plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        CollabTopology(host="h", secondaries=(), platforms={"h": GTX_1080TI})
+    with pytest.raises(ValueError):
+        CollabTopology(host="h", secondaries=("h",), platforms={"h": GTX_1080TI})
+    with pytest.raises(ValueError):
+        CollabTopology(host="h", secondaries=("a",), platforms={"h": GTX_1080TI})
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9))
+    assert topo.secondaries == ("e1", "e2")
+    with pytest.raises(KeyError):
+        CollabTopology(
+            host="h", secondaries=("a", "b"),
+            platforms={"h": GTX_1080TI, "a": GTX_1080TI, "b": GTX_1080TI},
+        ).link_between("h", "a")
+
+
+def test_capacity_ratios_proportional_to_eff_flops():
+    slow = GTX_1080TI.scaled(0.25, "slow")
+    topo = CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        default_link=Link(40e9),
+    )
+    r = topo.capacity_ratios()
+    assert r[0] == pytest.approx(0.8) and r[1] == pytest.approx(0.2)
+    plan = plan_halp_topology(NET, topo)
+    # the fast secondary owns ~4x the rows of the slow one at the input layer
+    fast_rows = plan.parts[0].out["fast"].rows
+    slow_rows = plan.parts[0].out["slow"].rows
+    assert 3.0 < fast_rows / slow_rows < 5.0
+
+
+def test_directed_links_differ():
+    topo = CollabTopology(
+        host="e0",
+        secondaries=("a", "b"),
+        platforms={"e0": GTX_1080TI, "a": GTX_1080TI, "b": GTX_1080TI},
+        links={("e0", "a"): Link(10e9)},
+        default_link=Link(40e9),
+    )
+    assert topo.link_between("e0", "a").rate_bps == 10e9
+    assert topo.link_between("a", "e0").rate_bps == 40e9
+
+
+# ---------------------------------------------------------------------------
+# N-way plan structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 4, 5])
+def test_nway_plan_tiles_and_isolates(n):
+    secs = tuple(f"e{j}" for j in range(1, n + 1))
+    plan = plan_halp_n(NET, secondaries=secs, overlap_rows=4)
+    sizes = NET.sizes()
+    assert len(plan.es_names) == 2 * n - 1
+    assert plan.secondary_slots == secs
+    for i, part in enumerate(plan.parts):
+        o = sizes[i + 1]
+        segs = [part.out[s] for s in plan.es_names]
+        assert segs[0].lo == 1 and segs[-1].hi == o
+        for a, b in zip(segs, segs[1:]):
+            assert b.lo == a.hi + 1
+        assert sum(s.rows for s in segs) == o
+    # no secondary-secondary exchange, ever
+    for i in range(len(plan.parts) - 1):
+        for a in secs:
+            for b in secs:
+                if a != b:
+                    assert not plan.message(i, a, b), (i, a, b)
+
+
+def test_nway_pool_boundaries_inherited():
+    plan = plan_halp_n(NET, secondaries=("e1", "e2", "e3"), overlap_rows=4)
+    for i, g in enumerate(NET.layers):
+        if g.kind != "pool":
+            continue
+        prev = plan.parts[i - 1].out
+        cur = plan.parts[i].out
+        for slot in plan.es_names[:-1]:
+            assert cur[slot].hi == prev[slot].hi // g.s
+
+
+def test_thin_layers_idle_low_ratio_secondaries():
+    """Graceful degradation: on layers too thin to feed every secondary, the
+    small slots own zero rows (idle) while the plan keeps tiling and
+    isolating -- it does not raise and does not break losslessness."""
+    plan = plan_halp_n(NET, secondaries=("a", "b", "c", "d", "e"))
+    rows16 = {s: plan.parts[16].out[s].rows for s in plan.secondary_slots}
+    assert sum(rows16.values()) > 0
+    assert min(rows16.values()) == 0  # somebody idles at the 14-row layer
+    # full tiling still holds at that layer
+    o = NET.sizes()[17]
+    assert sum(plan.parts[16].out[s].rows for s in plan.es_names) == o
+
+
+def test_optimizer_all_infeasible_raises_clearly():
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=16)
+    with pytest.raises(ValueError, match="no feasible HALP plan"):
+        optimize_plan(NET, topo, overlap_choices=(4,), max_rounds=1)
+
+
+def test_too_many_secondaries_raises():
+    """16 secondaries + 15 zones cannot fit VGG-16's 14-row deep layers."""
+    with pytest.raises((AssertionError, ValueError)):
+        plan_halp_n(NET, secondaries=tuple(f"e{j}" for j in range(1, 17)))
+    # 6-way also fails on this net (thin slots at g13-15 break isolation) --
+    # but loudly, with the remediation in the message, never silently.
+    with pytest.raises(AssertionError, match="widen the overlap zone"):
+        plan_halp_n(NET, secondaries=tuple(f"e{j}" for j in range(1, 7)))
+
+
+# ---------------------------------------------------------------------------
+# closed form vs. simulator on asymmetric platforms/links
+# ---------------------------------------------------------------------------
+
+
+def _hetero_topology():
+    slow = GTX_1080TI.scaled(0.4, "slow")
+    med = GTX_1080TI.scaled(0.7, "med")
+    return CollabTopology(
+        host="e0",
+        secondaries=("a", "b", "c"),
+        platforms={"e0": GTX_1080TI, "a": GTX_1080TI, "b": slow, "c": med},
+        links={("e0", "b"): Link(10e9), ("b", "e0"): Link(10e9)},
+        default_link=Link(40e9),
+    )
+
+
+def test_closed_form_matches_simulator_nway_symmetric():
+    for n in (3, 4, 5):
+        topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=n)
+        cf = halp_closed_form(NET, topology=topo)["total"]
+        ev = simulate_halp(NET, topology=topo)["total"]
+        assert abs(cf - ev) / ev < 0.10, (n, cf, ev)
+
+
+def test_closed_form_matches_simulator_heterogeneous():
+    topo = _hetero_topology()
+    cf = halp_closed_form(NET, topology=topo)["total"]
+    ev = simulate_halp(NET, topology=topo)["total"]
+    assert abs(cf - ev) / ev < 0.10, (cf, ev)
+
+
+def test_closed_form_upper_bounds_simulator_multitask():
+    """Eq. (22) is an upper bound (host zones fully serialised); it loosens
+    with more zones but must stay a bound and within 35% on this cluster."""
+    topo = _hetero_topology()
+    for n_tasks in (2, 4):
+        cf = halp_closed_form(NET, topology=topo, n_tasks=n_tasks)["total"]
+        ev = simulate_halp(NET, topology=topo, n_tasks=n_tasks)["total"]
+        assert cf >= 0.95 * ev, (n_tasks, cf, ev)
+        assert cf <= 1.35 * ev, (n_tasks, cf, ev)
+
+
+def test_straggler_slot_resources_nway():
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=3)
+    base = simulate_halp(NET, topology=topo)["total"]
+    slow = simulate_halp(NET, topology=topo, slowdown={"e2^0": 2.0})["total"]
+    assert slow > base
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_optimizer_beats_equal_split_on_heterogeneous_cluster():
+    """One fast + one slow secondary at unequal link rates: the optimizer's
+    capacity-aware plan must beat the paper's naive equal split clearly."""
+    slow = GTX_1080TI.scaled(0.35, "slow")
+    topo = CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        links={
+            ("e0", "fast"): Link(40e9), ("fast", "e0"): Link(40e9),
+            ("e0", "slow"): Link(10e9), ("slow", "e0"): Link(10e9),
+        },
+    )
+    naive = evaluate_plan(NET, topo, equal_ratios(topo), 4)
+    res = optimize_plan(NET, topo)
+    assert math.isfinite(res.makespan)
+    assert res.makespan < 0.75 * naive, (res.makespan, naive)
+    # the chosen split favours the fast secondary
+    assert res.ratios[0] > 0.6
+    # and the optimizer never returns something worse than its own start
+    start = evaluate_plan(NET, topo, topo.capacity_ratios(), res.overlap_rows)
+    assert res.makespan <= start + 1e-12
+
+
+def test_optimizer_on_symmetric_cluster_stays_near_equal():
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9))
+    res = optimize_plan(NET, topo, overlap_choices=(4,), max_rounds=4)
+    assert abs(res.ratios[0] - 0.5) < 0.15
+    seed_total = simulate_halp(NET, GTX_1080TI, Link(40e9))["total"]
+    assert res.makespan <= seed_total * 1.001
+
+
+def test_evaluate_plan_infeasible_is_inf():
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=16)
+    assert evaluate_plan(NET, topo, equal_ratios(topo), 4) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# split_rows edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_split_rows_skewed_ratios():
+    segs = split_rows(100, [0.9, 0.05, 0.05])
+    assert sum(s.rows for s in segs) == 100
+    assert segs[0].rows == 90
+    for a, b in zip(segs, segs[1:]):
+        assert b.lo == a.hi + 1
+
+
+def test_split_rows_total_smaller_than_n():
+    segs = split_rows(2, [0.25, 0.25, 0.25, 0.25])
+    assert sum(s.rows for s in segs) == 2
+    assert segs[0].lo == 1 and segs[-1].hi == 2
+    # boundaries stay monotone; some segments are empty
+    assert sum(1 for s in segs if not s) == 2
+
+
+def test_split_rows_extreme_skew_keeps_cover():
+    segs = split_rows(10, [0.998, 0.001, 0.001])
+    assert sum(s.rows for s in segs) == 10
+    assert segs[0].lo == 1 and segs[-1].hi == 10
+    for a, b in zip(segs, segs[1:]):
+        assert b.lo == a.hi + 1
+
+
+def test_split_rows_zero_total():
+    segs = split_rows(0, [0.5, 0.5])
+    assert all(not s for s in segs)
+
+
+def test_split_rows_rejects_bad_input():
+    with pytest.raises(ValueError):
+        split_rows(10, [0.5, 0.4])
+    with pytest.raises(ValueError):
+        split_rows(-1, [0.5, 0.5])
+
+
+def test_segment_basics():
+    assert Segment(3, 2).rows == 0
+    assert not Segment(3, 2)
+    assert Segment(1, 5).intersect(Segment(4, 9)) == Segment(4, 5)
