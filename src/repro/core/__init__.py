@@ -1,8 +1,9 @@
 """The paper's contribution: receptive-field-exact partitioning (rf, partition),
 HALP / MoDNN scheduling over arbitrary collaboration topologies (topology,
 schedule), one shared event topology feeding both latency engines (events),
-exact event simulation (simulator), plan-knob search (optimizer), and the
-service-reliability model (reliability)."""
+exact event simulation (simulator), plan-knob search (optimizer), the
+service-reliability model (reliability), and online channel-adaptive
+re-planning with a plan cache (replan)."""
 from .nets import ConvNetGeom, vgg16_geom
 from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
 from .partition import (
@@ -15,6 +16,17 @@ from .partition import (
     split_rows,
 )
 from .reliability import OffloadChannel, rate_fluctuation, service_reliability
+from .replan import (
+    LinkRateEstimator,
+    PlanCache,
+    ReplanConfig,
+    ReplanController,
+    StaticPlanner,
+    bucket_rate,
+    optimize_static,
+    rate_bucket,
+    topology_fingerprint,
+)
 from .rf import (
     LayerGeom,
     RFState,
@@ -33,5 +45,12 @@ from .schedule import (
     speedup_ratio,
     standalone_time,
 )
-from .simulator import Sim, enhanced_modnn_delay, simulate_halp, simulate_modnn
+from .simulator import (
+    GaussMarkovTrace,
+    Sim,
+    enhanced_modnn_delay,
+    replay_rate_trace,
+    simulate_halp,
+    simulate_modnn,
+)
 from .topology import CollabTopology, Link, Platform

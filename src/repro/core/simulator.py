@@ -20,15 +20,25 @@ per-resource slowdown factors model node degradation at scale.
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Mapping, Sequence
 
 from .events import build_halp_dag, init_bytes, resolve_halp_setup
 from .nets import ConvNetGeom
 from .partition import HALPPlan, plan_even
+from .reliability import IMAGE_BYTES
 from .topology import CollabTopology, Link, Platform
 
-__all__ = ["Sim", "Job", "simulate_halp", "simulate_modnn", "enhanced_modnn_delay"]
+__all__ = [
+    "Sim",
+    "Job",
+    "simulate_halp",
+    "simulate_modnn",
+    "enhanced_modnn_delay",
+    "GaussMarkovTrace",
+    "replay_rate_trace",
+]
 
 
 @dataclass
@@ -203,6 +213,98 @@ def simulate_modnn(
     head = sim.add("head", host, platform.compute_time(net.head_flops), final + [last[host]])
     total = sim.run()
     return dict(total=total, sim=sim)
+
+
+@dataclass(frozen=True)
+class GaussMarkovTrace:
+    """Bounded Gauss-Markov (AR(1), mean-reverting) rate process.
+
+    The standard mobility/channel fading model the paper's §V.D time-variant
+    channel implies: each step reverts ``1 - corr`` of the way to ``mean`` and
+    adds Gaussian innovation, clipped to [lo, hi].  ``corr=0`` is i.i.d.
+    sampling; ``corr=1`` removes the mean reversion (a clipped random walk --
+    combine with ``sigma_frac=0`` to freeze the channel).  Deterministic given
+    ``seed`` -- every policy in a comparison replays the identical channel."""
+
+    lo: float
+    hi: float
+    corr: float = 0.9
+    sigma_frac: float = 0.15  # innovation std as a fraction of (hi - lo)
+    mean: float | None = None  # reversion level; default: the band midpoint
+    start: float | None = None  # initial rate; default: the reversion level
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if not self.lo < self.hi:
+            raise ValueError(f"need lo < hi, got [{self.lo}, {self.hi}]")
+        if not 0.0 <= self.corr <= 1.0:
+            raise ValueError(f"corr must be in [0, 1], got {self.corr}")
+
+    def rates(self, n: int) -> list[float]:
+        """The first ``n`` rates of the process."""
+        rng = random.Random(self.seed)
+        mean = (self.lo + self.hi) / 2.0 if self.mean is None else self.mean
+        sigma = self.sigma_frac * (self.hi - self.lo)
+        x = mean if self.start is None else self.start
+        out = []
+        for _ in range(n):
+            out.append(x)
+            x = mean + self.corr * (x - mean) + rng.gauss(0.0, sigma)
+            x = min(self.hi, max(self.lo, x))
+        return out
+
+
+def replay_rate_trace(
+    net: ConvNetGeom,
+    topology: CollabTopology,
+    planner,
+    link_rates: Mapping[tuple[str, str], Sequence[float]],
+    n_epochs: int | None = None,
+    n_tasks: int = 4,
+    probe_bytes: float = float(IMAGE_BYTES),  # one image per rate probe
+) -> list[dict]:
+    """Replay a time-variant channel through the DES, one plan per epoch.
+
+    ``link_rates`` maps directed ES pairs to per-epoch true rates (e.g.
+    :meth:`GaussMarkovTrace.rates`); pairs not listed stay at ``topology``'s
+    nominal rate.  Per epoch the driver (a) asks ``planner`` for a plan -- the
+    planner only ever sees *past* observations, so adaptive policies react
+    with a one-epoch lag, exactly like a real serving loop, -- (b) simulates
+    the makespan under the epoch's **true** rates (plans are geometry-only,
+    so a stale plan is merely slow, never wrong), and (c) feeds one observed
+    ``probe_bytes`` transfer per traced link back to the planner.
+
+    ``planner`` implements the replan protocol (``plan_for_epoch()`` +
+    ``observe_transfer(src, dst, nbytes, elapsed_s)``):
+    :class:`~repro.core.replan.StaticPlanner` for the paper's offline
+    baseline, :class:`~repro.core.replan.ReplanController` for the adaptive
+    policies.  Returns one record per epoch with the true rates, the simulated
+    makespan, the plan served, and -- for planners exposing ``stats()`` -- a
+    snapshot of the planner's counters *after* serving the epoch (so cache
+    hit rates over any window can be recovered from the records)."""
+    if not link_rates:
+        raise ValueError("link_rates must map at least one directed pair to a trace")
+    max_epochs = min(len(trace) for trace in link_rates.values())
+    if n_epochs is None:
+        n_epochs = max_epochs
+    elif n_epochs > max_epochs:
+        raise ValueError(
+            f"n_epochs={n_epochs} exceeds the shortest trace ({max_epochs} "
+            f"entries); extend the traces or drop n_epochs"
+        )
+    results = []
+    for epoch in range(n_epochs):
+        plan = planner.plan_for_epoch()
+        rates = {pair: trace[epoch] for pair, trace in link_rates.items()}
+        true_topology = topology.with_links({p: Link(r) for p, r in rates.items()})
+        sim = simulate_halp(net, topology=true_topology, n_tasks=n_tasks, plan=plan)
+        for (src, dst), rate in rates.items():
+            planner.observe_transfer(src, dst, probe_bytes, 8.0 * probe_bytes / rate)
+        record = dict(epoch=epoch, rates=rates, makespan=sim["total"], plan=plan)
+        if hasattr(planner, "stats"):
+            record["planner_stats"] = planner.stats()
+        results.append(record)
+    return results
 
 
 def enhanced_modnn_delay(

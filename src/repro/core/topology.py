@@ -18,6 +18,7 @@ searches plan knobs against it.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Mapping
 
@@ -100,6 +101,32 @@ class CollabTopology:
         eff = [self.platforms[s].eff_flops for s in self.secondaries]
         total = sum(eff)
         return tuple(e / total for e in eff)
+
+    def collab_pairs(self) -> tuple[tuple[str, str], ...]:
+        """Every directed host<->secondary pair the HALP schedule can use.
+
+        Secondaries never exchange rows directly (the scheme's invariant), so
+        these 2N pairs are exactly the links a rate estimator must track."""
+        pairs: list[tuple[str, str]] = []
+        for s in self.secondaries:
+            pairs.append((self.host, s))
+            pairs.append((s, self.host))
+        return tuple(pairs)
+
+    def with_links(
+        self,
+        links: Mapping[tuple[str, str], Link],
+        default_link: Link | None = None,
+    ) -> "CollabTopology":
+        """A copy with some directed link rates replaced (same ESs/platforms).
+
+        This is the measured-rate rebuild used by the online re-planner: pairs
+        not in ``links`` keep their current rate (or the default link)."""
+        merged = dict(self.links)
+        merged.update(links)
+        return dataclasses.replace(
+            self, links=merged, default_link=default_link or self.default_link
+        )
 
     @staticmethod
     def symmetric(

@@ -1,3 +1,9 @@
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from .fault import FaultConfig, FaultTolerantTrainer, InjectedFault
-from .serve import BatchingEngine, Request, ServeConfig, choose_batch_size
+from .serve import (
+    BatchingEngine,
+    Request,
+    ServeConfig,
+    choose_batch_size,
+    plan_aware_batch_size,
+)

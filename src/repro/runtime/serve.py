@@ -7,6 +7,12 @@ uses the paper's reliability machinery: given the measured per-batch latency
 model and an offload-time distribution, ``choose_batch_size`` picks the
 largest batch whose P(deadline met) clears the target -- Table III turned into
 a scheduling policy (the beyond-paper integration of §V-D).
+
+The engine closes the measurement loop of the online re-planner
+(``repro.core.replan``): every executed batch's (size, latency) is handed to
+an optional observer -- typically ``ReplanController.observe_batch_latency``
+-- and ``plan_aware_batch_size`` re-runs the admission policy against the
+*current* plan's predicted makespan, so the admitted batch tracks the channel.
 """
 from __future__ import annotations
 
@@ -21,7 +27,13 @@ import numpy as np
 
 from ..core.reliability import OffloadChannel, service_reliability
 
-__all__ = ["Request", "ServeConfig", "BatchingEngine", "choose_batch_size"]
+__all__ = [
+    "Request",
+    "ServeConfig",
+    "BatchingEngine",
+    "choose_batch_size",
+    "plan_aware_batch_size",
+]
 
 
 @dataclass(order=True)
@@ -31,6 +43,7 @@ class Request:
     payload: Any = field(compare=False, default=None)
     arrival: float = field(compare=False, default=0.0)
     done: float | None = field(compare=False, default=None)
+    result: Any = field(compare=False, default=None)  # per-request model output
 
 
 @dataclass
@@ -43,10 +56,19 @@ class ServeConfig:
 class BatchingEngine:
     """Deadline-aware dynamic batcher around a jitted ``fn(batch_payloads)``."""
 
-    def __init__(self, fn: Callable, cfg: ServeConfig, clock: Callable = time.monotonic):
+    def __init__(
+        self,
+        fn: Callable,
+        cfg: ServeConfig,
+        clock: Callable = time.monotonic,
+        observer: Callable[[int, float], None] | None = None,
+    ):
         self.fn = fn
         self.cfg = cfg
         self.clock = clock
+        # called with (batch_size, elapsed_s) after every executed batch; wire
+        # ReplanController.observe_batch_latency here to close the replan loop
+        self.observer = observer
         self.queue: list[Request] = []  # deadline-ordered heap (EDF)
         self.completed: list[Request] = []
         self._rid = 0
@@ -78,9 +100,16 @@ class BatchingEngine:
         if self.cfg.pad_to_max and n < self.cfg.max_batch:
             payloads = payloads + [payloads[-1]] * (self.cfg.max_batch - n)
         stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *payloads)
+        t0 = self.clock()
         out = self.fn(stacked)
         jax.block_until_ready(out)
         now = self.clock()
+        if self.observer is not None:
+            # report the *executed* width: with pad_to_max the forward ran
+            # len(payloads) wide regardless of how many real requests were in
+            # it, and that is the size the measured latency corresponds to
+            # (anything else would skew a replan controller's calibration)
+            self.observer(len(payloads), now - t0)
         for i, r in enumerate(batch):
             r.done = now
             r.result = jax.tree_util.tree_map(lambda x: x[i], out)
@@ -121,3 +150,22 @@ def choose_batch_size(
         if rel >= target:
             best = b
     return best
+
+
+def plan_aware_batch_size(
+    controller,
+    deadline_s: float,
+    channel: OffloadChannel,
+    target: float = 0.99999,
+    max_batch: int = 64,
+) -> int:
+    """``choose_batch_size`` against the *current* plan's predicted makespan.
+
+    ``controller`` is a :class:`~repro.core.replan.ReplanController`: its
+    ``predicted_latency(b)`` prices a b-task batch with the closed form on the
+    plan the controller is serving right now (calibrated by measured batch
+    latencies), so after a re-plan the admitted batch size follows the new
+    plan without re-measuring a latency curve."""
+    return choose_batch_size(
+        controller.predicted_latency, deadline_s, channel, target=target, max_batch=max_batch
+    )

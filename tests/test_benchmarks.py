@@ -57,6 +57,25 @@ def test_hetero_sweep_monotone_gain():
     assert nway[3]["speedup"] > nway[2]["speedup"]
 
 
+def test_replan_sweep_acceptance():
+    """The cached adaptive planner must strictly beat the static nominal-rate
+    plan on a time-variant trace (reliability at the 133.3 ms deadline and
+    mean makespan), keep the steady-state cache hit rate >= 90%, and every
+    replanned plan must execute losslessly via run_plan."""
+    from benchmarks import replan_sweep
+
+    out = replan_sweep.run_sweep(include_always=False, max_verify_plans=3)
+    static, cached = out["static"], out["cached"]
+    assert cached["mean_makespan"] < static["mean_makespan"]
+    assert cached["mean_reliability"] > static["mean_reliability"]
+    assert cached["min_reliability"] > static["min_reliability"]
+    assert cached["steady_state_hit_rate"] >= 0.90
+    # the cache amortises: an order of magnitude fewer optimizer calls than
+    # the always-replan policy would need (one per epoch)
+    assert cached["optimizer_calls"] <= out["n_epochs"] // 5
+    assert out["plans_verified_lossless"] == 3
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""

@@ -1,0 +1,308 @@
+"""Online re-planning tests: rate estimator, bucketing, plan cache,
+hysteresis, channel replay, serving integration, and losslessness of
+replanned plans."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    AGX_XAVIER,
+    CollabTopology,
+    GaussMarkovTrace,
+    Link,
+    OffloadChannel,
+    PlanCache,
+    ReplanConfig,
+    ReplanController,
+    StaticPlanner,
+    bucket_rate,
+    optimize_static,
+    rate_bucket,
+    replay_rate_trace,
+)
+from repro.core.reliability import IMAGE_BYTES
+from repro.core.replan import LinkRateEstimator
+from repro.models import vgg
+from repro.runtime.serve import plan_aware_batch_size
+from repro.spatial import run_plan
+
+CFG = vgg.VGGConfig(img_res=64, width_mult=0.125, num_classes=10)
+NET = CFG.geom()
+NOMINAL = 120e6
+
+
+def small_topology() -> CollabTopology:
+    return CollabTopology(
+        host="e0",
+        secondaries=("a", "b"),
+        platforms={"e0": AGX_XAVIER, "a": AGX_XAVIER, "b": AGX_XAVIER},
+        default_link=Link(NOMINAL),
+    )
+
+
+# closed-form objective: plan *validity* and cache/hysteresis mechanics are
+# what these tests exercise, so the ~20x cheaper engine keeps them fast
+FAST = ReplanConfig(use_simulator=False, alpha=1.0, hysteresis=1, bucket_frac=0.5)
+
+
+def observe_rate(ctl: ReplanController, rate: float) -> None:
+    """One epoch's worth of probe observations on b's (volatile) link."""
+    for pair in (("e0", "b"), ("b", "e0")):
+        ctl.observe_transfer(*pair, IMAGE_BYTES, 8.0 * IMAGE_BYTES / rate)
+
+
+# -- bucketing ----------------------------------------------------------------
+
+
+def test_rate_bucket_bands():
+    f = 0.25
+    # same band iff within the geometric width; representative inside the band
+    for r in (40e6, 120e6, 2.5e9, 100e9):
+        b = rate_bucket(r, f)
+        assert rate_bucket(r * 1.001, f) in (b, b + 1)
+        rep = bucket_rate(b, f)
+        assert rep / r < (1 + f) and r / rep < (1 + f)
+    # monotone in the rate
+    rates = [10e6 * (1.3**i) for i in range(20)]
+    buckets = [rate_bucket(r, f) for r in rates]
+    assert buckets == sorted(buckets)
+
+
+def test_rate_bucket_exact_mode_and_errors():
+    # bucket_frac <= 0 keys on the exact rate (always-replan degenerate mode)
+    assert rate_bucket(123.0e6, 0.0) == 123.0e6
+    assert bucket_rate(123.0e6, 0.0) == 123.0e6
+    with pytest.raises(ValueError):
+        rate_bucket(0.0, 0.25)
+
+
+# -- estimator ----------------------------------------------------------------
+
+
+def test_estimator_seeds_from_topology_and_ewma():
+    topo = small_topology()
+    est = LinkRateEstimator.from_topology(topo, alpha=0.4)
+    assert est.rate("e0", "b") == NOMINAL
+    assert set(est.rates()) == set(topo.collab_pairs())
+    # one observed transfer at 30 Mbps moves the estimate 40% of the way
+    est.observe("e0", "b", 125_000.0, 8 * 125_000.0 / 30e6)
+    assert est.rate("e0", "b") == pytest.approx(0.6 * NOMINAL + 0.4 * 30e6)
+    assert est.rate("b", "e0") == NOMINAL  # directions are independent
+    with pytest.raises(ValueError):
+        est.observe("e0", "b", 0.0, 1.0)
+    with pytest.raises(ValueError):
+        LinkRateEstimator({}, alpha=0.0)
+
+
+# -- plan cache ---------------------------------------------------------------
+
+
+def test_plan_cache_lru_and_stats():
+    cache = PlanCache(capacity=2)
+    a, b, c = object(), object(), object()
+    assert cache.get("a") is None  # miss
+    cache.put("a", a)
+    cache.put("b", b)
+    assert cache.get("a") is a  # hit; refreshes LRU position
+    cache.put("c", c)  # evicts b (least recently used)
+    assert cache.get("b") is None
+    assert cache.get("a") is a and cache.get("c") is c
+    assert cache.evictions == 1 and len(cache) == 2
+    assert cache.hits == 3 and cache.misses == 2
+    assert cache.hit_rate == pytest.approx(0.6)
+    assert cache.entries() == [a, c]
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+
+
+# -- hysteresis (step() only: no optimisation happens) ------------------------
+
+
+def test_hysteresis_debounces_single_epoch_excursions():
+    ctl = ReplanController(
+        NET, small_topology(), ReplanConfig(alpha=1.0, hysteresis=3, bucket_frac=0.5)
+    )
+    # one deviant epoch, then back to nominal: never adopted
+    observe_rate(ctl, 30e6)
+    assert ctl.step() is False
+    observe_rate(ctl, NOMINAL)
+    assert ctl.step() is False
+    assert ctl.replans == 0
+    # the deviant bucket must persist `hysteresis` consecutive epochs
+    observe_rate(ctl, 30e6)
+    assert ctl.step() is False
+    observe_rate(ctl, 30e6)
+    assert ctl.step() is False
+    observe_rate(ctl, 30e6)
+    assert ctl.step() is True
+    assert ctl.replans == 1
+    # in-bucket jitter never triggers (29 vs 30 Mbps share a 50% band)
+    observe_rate(ctl, 29e6)
+    assert ctl.step() is False
+
+
+def test_hysteresis_leq_one_adopts_immediately():
+    ctl = ReplanController(
+        NET, small_topology(), ReplanConfig(alpha=1.0, hysteresis=0, bucket_frac=0.5)
+    )
+    observe_rate(ctl, 30e6)
+    assert ctl.step() is True and ctl.replans == 1
+
+
+def test_hysteresis_not_starved_by_monotone_drift():
+    """A channel crossing one bucket band per epoch still replans: the counter
+    tracks consecutive epochs *outside* the active bands, not epochs on one
+    candidate key."""
+    ctl = ReplanController(
+        NET, small_topology(), ReplanConfig(alpha=1.0, hysteresis=2, bucket_frac=0.5)
+    )
+    observe_rate(ctl, 60e6)  # new band vs the 120 Mbps nominal
+    assert ctl.step() is False
+    observe_rate(ctl, 30e6)  # yet another band: still counts toward adoption
+    assert ctl.step() is True
+    assert ctl.replans == 1
+
+
+# -- controller + cache -------------------------------------------------------
+
+
+def test_controller_cache_hits_on_bucket_revisit():
+    ctl = ReplanController(NET, small_topology(), FAST)
+    p_nominal = ctl.plan_for_epoch()  # miss 1: nominal bucket
+    observe_rate(ctl, 30e6)
+    p_slow = ctl.plan_for_epoch()  # miss 2: degraded bucket
+    observe_rate(ctl, NOMINAL)
+    assert ctl.plan_for_epoch() is p_nominal  # hit: nominal bucket cached
+    observe_rate(ctl, 30e6)
+    assert ctl.plan_for_epoch() is p_slow  # hit: degraded bucket cached
+    assert ctl.cache.misses == 2 and ctl.cache.hits == 2
+    assert ctl.optimizer_calls == 2 and ctl.replans == 3
+
+
+def test_shared_cache_across_controllers():
+    cache = PlanCache()
+    a = ReplanController(NET, small_topology(), FAST, cache=cache)
+    a.plan_for_epoch()
+    b = ReplanController(NET, small_topology(), FAST, cache=cache)
+    b.plan_for_epoch()  # identical fingerprint + bucket: shared entry
+    assert cache.misses == 1 and cache.hits == 1
+    assert b.optimizer_calls == 0
+    # a different optimiser config must NOT collide on the shared cache
+    # (bucket indices are grid-relative, so bucket_frac keys the fingerprint)
+    c = ReplanController(
+        NET, small_topology(),
+        ReplanConfig(use_simulator=False, alpha=1.0, hysteresis=1, bucket_frac=0.3),
+        cache=cache,
+    )
+    c.plan_for_epoch()
+    assert c.optimizer_calls == 1 and cache.misses == 2
+
+
+def test_serving_reads_do_not_skew_epoch_telemetry():
+    """plan/makespan/predicted_latency peek at the cache: hit/miss counters
+    keep measuring plan requests per control epoch only."""
+    ctl = ReplanController(NET, small_topology(), FAST)
+    ctl.plan_for_epoch()  # 1 miss (fills the cache)
+    hits, misses = ctl.cache.hits, ctl.cache.misses
+    _ = ctl.plan
+    _ = ctl.makespan
+    _ = ctl.predicted_latency(4)
+    ctl.observe_batch_latency(4, 0.01)
+    assert (ctl.cache.hits, ctl.cache.misses) == (hits, misses)
+    ctl.plan_for_epoch()  # the epoch path still counts
+    assert ctl.cache.hits == hits + 1
+
+
+# -- trace + replay -----------------------------------------------------------
+
+
+def test_gauss_markov_trace_deterministic_and_bounded():
+    tr = GaussMarkovTrace(lo=30e6, hi=120e6, corr=0.9, sigma_frac=0.2, seed=4)
+    rates = tr.rates(100)
+    assert rates == tr.rates(100)  # seeded determinism
+    assert all(30e6 <= r <= 120e6 for r in rates)
+    assert len(set(rates)) > 10  # actually moves
+    frozen = GaussMarkovTrace(lo=1.0, hi=2.0, corr=1.0, sigma_frac=0.0, start=1.5)
+    assert frozen.rates(5) == [1.5] * 5
+    with pytest.raises(ValueError):
+        GaussMarkovTrace(lo=2.0, hi=1.0)
+    with pytest.raises(ValueError):
+        GaussMarkovTrace(lo=0.0, hi=1.0, corr=1.5)
+
+
+def test_replay_validates_traces():
+    topo = small_topology()
+    planner = StaticPlanner(optimize_static(NET, topo, FAST).plan)
+    with pytest.raises(ValueError, match="at least one"):
+        replay_rate_trace(NET, topo, planner, {}, n_tasks=1)
+    short = {("e0", "b"): [NOMINAL] * 3, ("b", "e0"): [NOMINAL] * 3}
+    with pytest.raises(ValueError, match="shortest trace"):
+        replay_rate_trace(NET, topo, planner, short, n_epochs=5, n_tasks=1)
+    assert len(replay_rate_trace(NET, topo, planner, short, n_tasks=1)) == 3
+
+
+def test_replay_adaptive_beats_static_on_sustained_collapse():
+    """b's link collapses 120 -> 30 Mbps at epoch 4 and stays: the adaptive
+    planner re-balances after the hysteresis lag and wins on mean makespan;
+    the DES objective keeps this a ground-truth comparison."""
+    topo = small_topology()
+    n = 16
+    trace = [NOMINAL] * 4 + [30e6] * (n - 4)
+    link_rates = {("e0", "b"): trace, ("b", "e0"): trace}
+    cfg = ReplanConfig(n_tasks=2, hysteresis=1)
+    static = replay_rate_trace(
+        NET, topo, StaticPlanner(optimize_static(NET, topo, cfg).plan),
+        link_rates, n_tasks=2,
+    )
+    ctl = ReplanController(NET, topo, cfg)
+    adaptive = replay_rate_trace(NET, topo, ctl, link_rates, n_tasks=2)
+    mean = lambda run: sum(r["makespan"] for r in run) / len(run)
+    assert mean(adaptive) < 0.99 * mean(static)
+    assert ctl.replans >= 1
+    assert "planner_stats" in adaptive[-1]
+    # once re-balanced, the adaptive plan wins in the degraded regime
+    assert adaptive[-1]["makespan"] < static[-1]["makespan"]
+
+
+# -- serving integration ------------------------------------------------------
+
+
+def test_plan_aware_batch_size_tracks_channel():
+    ctl = ReplanController(NET, small_topology(), FAST)
+    channel = OffloadChannel(rate_bps=100e6, sigma_s=1e-3)
+    generous = plan_aware_batch_size(ctl, 2.0, channel, target=0.999, max_batch=8)
+    tight = plan_aware_batch_size(ctl, 0.045, channel, target=0.999, max_batch=8)
+    assert 1 <= tight <= generous <= 8
+    assert generous == 8  # 2 s of slack admits everything on the small net
+    mid = plan_aware_batch_size(ctl, 0.06, channel, target=0.999, max_batch=8)
+    # a measured collapse raises the predicted makespan, shrinking admission
+    observe_rate(ctl, 5e6)
+    ctl.step()
+    degraded = plan_aware_batch_size(ctl, 0.06, channel, target=0.999, max_batch=8)
+    assert degraded <= mid
+
+
+def test_observe_batch_latency_calibrates_predictions():
+    ctl = ReplanController(NET, small_topology(), FAST)
+    before = ctl.predicted_latency(2)
+    # measured latency 3x the raw prediction -> calibration moves up (alpha=1)
+    ctl.observe_batch_latency(2, 3.0 * before)
+    after = ctl.predicted_latency(2)
+    assert after == pytest.approx(3.0 * before, rel=1e-6)
+    # clamped against outliers
+    ctl.observe_batch_latency(2, 1e6)
+    assert ctl.stats()["calibration"] <= 10.0
+
+
+# -- losslessness of replanned plans ------------------------------------------
+
+
+def test_replanned_plan_is_lossless():
+    ctl = ReplanController(NET, small_topology(), FAST)
+    observe_rate(ctl, 30e6)
+    plan = ctl.plan_for_epoch()
+    params = vgg.init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, CFG.img_res, CFG.img_res, 3))
+    ref = vgg.features(params, CFG, x)
+    out = run_plan(plan, params["features"], vgg.apply_layer, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)

@@ -1,5 +1,6 @@
 """Runtime tests: checkpoint/restore, fault-tolerant training, serving engine,
 optimizer, data determinism."""
+import dataclasses
 import tempfile
 
 import jax
@@ -15,13 +16,14 @@ from repro.runtime import (
     FaultConfig,
     FaultTolerantTrainer,
     InjectedFault,
+    Request,
     ServeConfig,
     choose_batch_size,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.core.reliability import OffloadChannel
+from repro.core.reliability import OffloadChannel, service_reliability
 
 
 def test_adamw_reduces_quadratic():
@@ -166,3 +168,69 @@ def test_choose_batch_size_policy():
     b_slow = choose_batch_size(lat, 4.0 / 30.0, ch_slow, target=0.999, max_batch=16)
     assert b_fast >= b_slow
     assert 1 <= b_slow <= 16
+
+
+def test_request_declares_result_field():
+    """``BatchingEngine.step`` assigns per-request outputs; the dataclass must
+    declare the field (not rely on instance-attribute injection)."""
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert "result" in names
+    assert Request(deadline=1.0, rid=1).result is None
+
+
+def test_service_reliability_sigma_zero_is_a_step():
+    """sigma=0 degenerates to a deterministic deadline check (boundary met)."""
+    ch = OffloadChannel(rate_bps=40e6, sigma_s=0.0)  # mu = 4 Mbit / 40 Mbps = 0.1 s
+    assert service_reliability(ch, 0.0333, 4.0 / 30.0) == 1.0  # slack ~0, met
+    assert service_reliability(ch, 0.0334, 4.0 / 30.0) == 0.0
+    assert service_reliability(ch, 0.0, 4.0 / 30.0) == 1.0
+
+
+def test_choose_batch_size_sigma_zero_deterministic():
+    """With a deterministic channel the policy picks the exact cutoff batch."""
+    ch = OffloadChannel(rate_bps=40e6, sigma_s=0.0)  # mu = 0.1 s
+    lat = lambda b: 5e-3 * b
+    # feasible iff 0.1 + 0.005 b <= 4/30 = 0.1333... i.e. b <= 6
+    assert choose_batch_size(lat, 4.0 / 30.0, ch, target=0.99999, max_batch=16) == 6
+
+
+def test_choose_batch_size_unreachable_target_falls_back_to_one():
+    ch = OffloadChannel(rate_bps=40e6, sigma_s=5e-3)
+    assert choose_batch_size(lambda b: 10.0, 4.0 / 30.0, ch, max_batch=16) == 1
+
+
+def test_choose_batch_size_non_monotone_latency():
+    """A latency spike at a middle batch size must not mask larger feasible
+    batches: the policy returns the *largest* batch clearing the target."""
+    ch = OffloadChannel(rate_bps=40e6, sigma_s=0.0)  # mu = 0.1 s
+    lat = lambda b: 0.2 if b == 3 else 1e-3 * b  # b=3 infeasible, b=8 fine
+    assert choose_batch_size(lat, 4.0 / 30.0, ch, target=0.99999, max_batch=8) == 8
+
+
+def test_batching_engine_observer_sees_executed_width():
+    """The engine reports (executed batch width, elapsed) per batch -- the
+    feedback hook the online re-planner calibrates against.  With pad_to_max
+    the final short batch runs (and is reported) at the padded width, since
+    that is the size the measured latency corresponds to."""
+    seen = []
+    eng = BatchingEngine(
+        jax.jit(lambda b: b),
+        ServeConfig(max_batch=4),
+        observer=lambda n, dt: seen.append((n, dt)),
+    )
+    for i in range(10):
+        eng.submit(jnp.ones(()) * i, deadline_s=5.0)
+    eng.run_until_drained()
+    assert [n for n, _ in seen] == [4, 4, 4]  # last batch padded 2 -> 4
+    assert all(dt >= 0.0 for _, dt in seen)
+
+    seen.clear()
+    eng = BatchingEngine(
+        jax.jit(lambda b: b),
+        ServeConfig(max_batch=4, pad_to_max=False),
+        observer=lambda n, dt: seen.append((n, dt)),
+    )
+    for i in range(10):
+        eng.submit(jnp.ones(()) * i, deadline_s=5.0)
+    eng.run_until_drained()
+    assert [n for n, _ in seen] == [4, 4, 2]  # unpadded: true sizes
