@@ -2,18 +2,28 @@
 HALP / MoDNN scheduling over arbitrary collaboration topologies (topology,
 schedule), one shared event topology feeding both latency engines (events),
 exact event simulation (simulator), plan-knob search (optimizer), the
-service-reliability model (reliability), and online channel-adaptive
-re-planning with a plan cache (replan)."""
+service-reliability model (reliability), online channel-adaptive re-planning
+with a plan cache (replan), and per-task heterogeneous placement over a shared
+ES pool (placement)."""
 from .nets import ConvNetGeom, vgg16_geom
 from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
 from .partition import (
     HALPPlan,
+    PlanInfeasible,
     Segment,
     plan_even,
     plan_halp,
     plan_halp_n,
     plan_halp_topology,
     split_rows,
+)
+from .placement import (
+    PlacementController,
+    PlacementResult,
+    TaskPlacement,
+    place_tasks,
+    shared_plan_placement,
+    simulate_placement,
 )
 from .reliability import OffloadChannel, rate_fluctuation, service_reliability
 from .replan import (

@@ -34,6 +34,7 @@ __all__ = [
     "final_bytes",
     "resolve_halp_setup",
     "build_halp_dag",
+    "build_multitask_dag",
 ]
 
 
@@ -140,8 +141,16 @@ def sec_step(plan: HALPPlan, layer: int, slot: str) -> SecStep:
             else ()
         )
         return SecStep(slot=slot, own_rows=own.rows, dep_rows=own.rows, sends=sends)
+    # Adjacent zones are always listed (an empty send still orders the zone's
+    # chunk behind the secondary's dep compute); non-adjacent zones appear
+    # only when auto-reduced plans route rows into a widened host tail zone
+    # (a direct uplink -- the no-secondary-exchange invariant is untouched).
+    adjacent = plan.adjacent_zones(slot)
+    targets = [*adjacent] + [
+        z for z in plan.zone_slots if z not in adjacent and plan.message(layer, slot, z)
+    ]
     sends = []
-    for z in plan.adjacent_zones(slot):
+    for z in targets:
         seg = plan.message(layer, slot, z)
         sends.append((z, seg, plan.message_bytes(layer, slot, z)))
     return SecStep(
@@ -181,20 +190,56 @@ def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list
     links, full duplex).  The host serves the per-task zones in task order
     within each layer (paper §IV.B).  Returns the head job id of every task.
 
-    Per layer, each secondary computes its dependent boundary rows first and
-    ships them to the adjacent host zones while computing the rest (eq. 16);
-    the host computes each zone's rows-for-above chunk, sends it, then the
-    rest, then sends below (eq. 18) -- zone j's chunks gate on the boundary
-    messages of the adjacent secondaries from the previous layer.
+    This is the paper's §IV.B deployment: every task runs the *same* plan on
+    its own clone of the secondary group (N x n_tasks distinct secondaries),
+    so secondary resources are suffixed per task.  For *physically shared*
+    secondaries with per-task plans, see :func:`build_multitask_dag`.
+    """
+    return _lay_halp_dag(sim, plans, topology, lambda t, s: f"{s}^{t}")
+
+
+def build_multitask_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list[int]:
+    """Lay the job/message DAG for ``len(plans)`` tasks on ONE physical pool.
+
+    Unlike :func:`build_halp_dag` (per-task secondary clones), every plan's
+    slot names here are *physical* ES names of ``topology``: two tasks that
+    name the same secondary contend for it (FIFO), all tasks contend for the
+    host, and a directed link ``link:a->b`` is one resource no matter how
+    many tasks route over it.  This is the engine behind per-task
+    heterogeneous placement (``repro.core.placement``): tasks may carry
+    different plans over different sub-topologies, and shared host/link
+    contention falls out of the resource naming rather than being modelled
+    separately.  Returns the head job id of every task."""
+    if not plans:
+        raise ValueError("need at least one task plan")
+    net = plans[0].net
+    host = plans[0].host
+    for t, plan in enumerate(plans):
+        if plan.net != net:
+            raise ValueError(f"task {t}: all tasks must share one network geometry")
+        if plan.host != host:
+            raise ValueError(f"task {t}: host {plan.host!r} != task 0 host {host!r}")
+        for s in plan.secondary_slots:
+            if s not in topology.platforms:
+                raise ValueError(f"task {t}: secondary {s!r} not in the topology pool")
+    return _lay_halp_dag(sim, plans, topology, lambda t, s: s)
+
+
+def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res) -> list[int]:
+    """Shared DAG builder behind both multi-task deployments.
+
+    ``sec_res(task, slot)`` names the compute resource of a secondary slot
+    (and its link endpoints).  Per layer, each secondary computes its
+    dependent boundary rows first and ships them to the host zones that need
+    them while computing the rest (eq. 16); the host computes each zone's
+    rows-for-above chunk, sends it, then the rest, then sends below
+    (eq. 18) -- a zone's chunks gate on the boundary messages it consumes
+    from the previous layer.
     """
     net = plans[0].net
     host = plans[0].host
     n_layers = len(net.layers)
-    n_tasks = len(plans)
     row_flops = _row_flops(net)
-
-    def sec_res(t: int, slot: str) -> str:
-        return f"{slot}^{t}"
 
     def cmp_time(es: str, layer: int, rows: int) -> float:
         return topology.platform_of(es).compute_time(row_flops[layer] * rows)
@@ -202,8 +247,8 @@ def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list
     last_chunk: dict[tuple[int, str], int | None] = {}
     # (task, sec_slot, layer) -> message jobs the secondary needs before layer
     sec_gate: dict[tuple[int, str, int], list[int]] = {}
-    # (task, layer, zone_slot, src_sec) -> boundary message gating a zone chunk
-    zone_gate: dict[tuple[int, int, str, str], int] = {}
+    # (task, layer, zone_slot) -> {src_sec: boundary message gating the zone}
+    zone_in: dict[tuple[int, int, str], dict[str, int]] = {}
 
     # initial image distribution host -> secondaries (eq. 10)
     for t, plan in enumerate(plans):
@@ -235,7 +280,7 @@ def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list
                         [a],
                     )
                     if i + 1 < n_layers:
-                        zone_gate[(t, i + 1, z, s)] = m
+                        zone_in.setdefault((t, i + 1, z), {})[s] = m
                 b = sim.add(
                     f"cmp[{t}]{s}.g{i}.rest",
                     sec_res(t, s),
@@ -248,11 +293,12 @@ def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list
         for t, plan in enumerate(plans):
             for z in plan.zone_slots:
                 step = zone_step(plan, i, z)
+                gates = zone_in.get((t, i, z), {})
                 a = sim.add(
                     f"cmp[{t}]{z}.g{i}.for_{step.above}",
                     host,
                     cmp_time(host, i, step.rows_for_above),
-                    [last_chunk.get((t, host)), zone_gate.get((t, i, z, step.above))],
+                    [last_chunk.get((t, host)), gates.get(step.above)],
                 )
                 s1 = sim.add(
                     f"msg[{t}]{z}->{step.above}.g{i}",
@@ -264,7 +310,10 @@ def build_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology) -> list
                     f"cmp[{t}]{z}.g{i}.rest",
                     host,
                     cmp_time(host, i, step.zone_rows - step.rows_for_above),
-                    [a, zone_gate.get((t, i, z, step.below))],
+                    # the rest chunk consumes every other boundary message the
+                    # zone received (positionally below, plus -- in reduced
+                    # plans -- any dropped secondary routing into a tail zone)
+                    [a] + [m for src, m in gates.items() if src != step.above],
                 )
                 s2 = sim.add(
                     f"msg[{t}]{z}->{step.below}.g{i}",

@@ -56,10 +56,17 @@ def evaluate_plan(
     ratios: Sequence[float],
     overlap_rows: int,
     n_tasks: int = 1,
+    auto_reduce: bool = True,
 ) -> float:
-    """Simulated makespan of one candidate; +inf if the plan is infeasible."""
+    """Simulated makespan of one candidate; +inf if the plan is infeasible.
+
+    ``auto_reduce=False`` restricts the search to strictly-isolating plans
+    (no per-layer secondary reduction); thin layers then price +inf."""
     try:
-        plan = plan_halp_topology(net, topology, overlap_rows=overlap_rows, ratios=ratios)
+        plan = plan_halp_topology(
+            net, topology, overlap_rows=overlap_rows, ratios=ratios,
+            auto_reduce=auto_reduce,
+        )
         return simulate_halp(net, topology=topology, n_tasks=n_tasks, plan=plan)["total"]
     except (AssertionError, ValueError):
         return float("inf")
@@ -76,6 +83,7 @@ def optimize_plan(
     min_ratio: float = 0.02,
     max_rounds: int = 12,
     objective: Callable[[tuple[float, ...], int], float] | None = None,
+    auto_reduce: bool = True,
 ) -> OptimizeResult:
     """Coordinate-descent search for the fastest (ratios, overlap) pair.
 
@@ -91,7 +99,9 @@ def optimize_plan(
     history: list[tuple[tuple[float, ...], int, float]] = []
 
     def default_objective(ratios: tuple[float, ...], w: int) -> float:
-        return evaluate_plan(net, topology, ratios, w, n_tasks=n_tasks)
+        return evaluate_plan(
+            net, topology, ratios, w, n_tasks=n_tasks, auto_reduce=auto_reduce
+        )
 
     fn = objective or default_objective
 
@@ -144,7 +154,9 @@ def optimize_plan(
             f"{net.name} over overlap choices {tuple(overlap_choices)}; use fewer "
             f"secondaries or a larger input"
         )
-    plan = plan_halp_topology(net, topology, overlap_rows=best_w, ratios=ratios)
+    plan = plan_halp_topology(
+        net, topology, overlap_rows=best_w, ratios=ratios, auto_reduce=auto_reduce
+    )
     return OptimizeResult(
         ratios=ratios,
         overlap_rows=best_w,

@@ -37,12 +37,26 @@ __all__ = [
     "Segment",
     "LayerPartition",
     "HALPPlan",
+    "PlanInfeasible",
     "split_rows",
     "plan_halp",
     "plan_halp_n",
     "plan_halp_topology",
     "plan_even",
 ]
+
+
+class PlanInfeasible(ValueError):
+    """A partition that cannot be realised under the HALP invariants.
+
+    Carries the offending ``layer`` and the layers auto-reduction should try
+    shrinking (``reduce_at``), so :func:`plan_halp_n` can degrade gracefully
+    instead of giving up."""
+
+    def __init__(self, layer: int, msg: str, reduce_at: tuple[int, ...] = ()):
+        super().__init__(msg)
+        self.layer = layer
+        self.reduce_at = reduce_at or (layer,)
 
 E1, E0, E2 = "e1", "e0", "e2"  # paper's ES names; e0 is the host
 
@@ -115,6 +129,11 @@ class HALPPlan:
 
     def owner_rows(self, layer: int, es: str) -> Segment:
         return self.parts[layer].out[es]
+
+    def active_secondaries(self, layer: int) -> tuple[str, ...]:
+        """Secondary slots owning at least one row at ``layer`` (auto-reduced
+        or ratio-starved slots drop out of this list)."""
+        return tuple(s for s in self.secondary_slots if self.parts[layer].out[s])
 
     def message(self, layer: int, src: str, dst: str) -> Segment:
         """Rows of layer ``layer``'s *output* that src owns and dst needs as
@@ -233,11 +252,62 @@ def _conv_slot_rows(
     return counts
 
 
+def _reduced_slot_rows(
+    o: int, overlap_rows: int, ratios: Sequence[float], align: int, n_active: int
+) -> list[int]:
+    """Slot row counts when only the first ``n_active`` secondaries stay active.
+
+    Layout (graceful degradation, part 2): the leading ``n_active`` secondaries
+    keep their interleaved thin zones, the zone right after the last active
+    secondary becomes a *host-owned tail* absorbing the row share of every
+    dropped secondary, and all trailing slots own zero rows:
+
+        s_0 | z_0 | ... | s_{n'-1} | tail (host) | 0 | 0 | ...
+
+    The tail must be host-owned: at the layer where reduction kicks in, the
+    dropped secondaries' previous-layer rows feed the tail region, and only
+    sec->host transfers preserve the no-secondary-exchange invariant.  The
+    tail therefore takes the *combined ratio share of the dropped
+    secondaries*, keeping every active segment at roughly the size it has in
+    the unreduced layout (so thin overlap zones still cover the boundaries)."""
+    n_sec = len(ratios)
+    if n_active >= n_sec:
+        return _conv_slot_rows(o, overlap_rows, ratios, align)
+    k_thin = n_active - 1
+    w_eff = min(overlap_rows, max(1, o - 2))
+    units = o // align
+    w_u = max(1, -(-w_eff // align))  # ceil
+    while units - k_thin * w_u < n_active + 1 and w_u > 1:
+        w_u -= 1
+    body_u = units - k_thin * w_u
+    if body_u < n_active + 1:  # active secondaries + a non-empty host tail
+        raise ValueError(
+            f"cannot fit {n_active} active secondaries + a host tail into {o} rows"
+        )
+    shares = [*ratios[:n_active], sum(ratios[n_active:])]
+    total = sum(shares)
+    counts_u = [s.rows for s in split_rows(body_u, [r / total for r in shares])]
+    # every active secondary and the tail need at least one unit each
+    while min(counts_u) < 1:
+        counts_u[counts_u.index(max(counts_u))] -= 1
+        counts_u[counts_u.index(min(counts_u))] += 1
+    counts = []
+    for j in range(n_active):
+        counts.append(counts_u[j] * align)
+        if j < k_thin:
+            counts.append(w_u * align)
+    # host tail zone absorbs the dropped share and the alignment remainder
+    counts.append(counts_u[-1] * align + (o - units * align))
+    counts.extend([0] * (2 * (n_sec - n_active) - 1))
+    return counts
+
+
 def plan_halp(
     net: ConvNetGeom,
     overlap_rows: int = 4,
     es_names: tuple[str, str, str] = (E1, E0, E2),
     ratios: Sequence[float] | None = None,
+    auto_reduce: bool = True,
 ) -> HALPPlan:
     """The paper's 2-secondary HALP partition (§IV.A) -- thin wrapper over
     :func:`plan_halp_n` preserving the original ``(e1, e0, e2)`` interface."""
@@ -248,6 +318,7 @@ def plan_halp(
         host=host,
         overlap_rows=overlap_rows,
         ratios=ratios,
+        auto_reduce=auto_reduce,
     )
 
 
@@ -257,6 +328,7 @@ def plan_halp_n(
     host: str = E0,
     overlap_rows: int = 4,
     ratios: Sequence[float] | None = None,
+    auto_reduce: bool = True,
 ) -> HALPPlan:
     """Build the N-way heterogeneous HALP partition.
 
@@ -269,15 +341,22 @@ def plan_halp_n(
     send the output of the current CL ... for the pooling layer").  Pool
     layers inherit the previous layer's boundaries divided by the stride.
 
-    The plan asserts that non-adjacent slots never need each other's rows:
-    all boundary traffic flows through the host's zones, as the scheme
-    requires (no secondary-secondary exchange).  Layers too thin to give
-    every secondary at least one alignment unit degrade gracefully: the
-    smaller-ratio secondaries own *zero* rows there (they idle for that
-    layer; the plan stays lossless and isolation still holds).  If even that
-    is impossible -- more zones than rows, or a thin slot would force a
-    secondary-secondary message -- the partitioner raises with the
-    remediation in the message rather than emitting a broken plan."""
+    The plan asserts the scheme's invariant that secondaries never exchange
+    rows directly: all boundary traffic flows through the host.  Layers too
+    thin to give every secondary at least one alignment unit degrade
+    gracefully in two stages.  First, smaller-ratio secondaries may own
+    *zero* rows at a layer (they idle; the plan stays lossless).  Second,
+    with ``auto_reduce`` (the default), layers where even that breaks the
+    invariant -- more slots than rows, or a thin slot forcing a
+    secondary-secondary message -- shrink to fewer *active* secondaries: the
+    trailing secondaries are dropped from that depth on (monotone -- once
+    dropped, an ES stays idle for the rest of the net) and the host absorbs
+    their row share in a widened tail zone (:func:`_reduced_slot_rows`).
+    Order secondaries fastest-first so reductions shed the weakest ESs.
+    Only when even a single active secondary cannot hold a layer does the
+    partitioner raise, with the remediation in the message.  With
+    ``auto_reduce=False`` any violation raises immediately (the pre-reduction
+    behaviour, kept for strict-isolation callers and error-path tests)."""
     secondaries = tuple(secondaries)
     n_sec = len(secondaries)
     if n_sec < 2:
@@ -292,6 +371,51 @@ def plan_halp_n(
     if total_ratio <= 0 or any(r < 0 for r in ratios):
         raise ValueError(f"ratios must be non-negative with a positive sum, got {ratios}")
     ratios = [r / total_ratio for r in ratios]
+    n_layers = len(net.layers)
+    # a cap only changes the layout of a *conv* layer; pools inherit, so a
+    # reduction aimed at a pool must land on the conv it inherits from
+    conv_anchor: list[int] = []
+    for i, g in enumerate(net.layers):
+        conv_anchor.append(i if g.kind != "pool" or i == 0 else conv_anchor[i - 1])
+    caps = [n_sec] * n_layers
+    for _ in range(n_sec * n_layers + 1):
+        try:
+            plan = _build_plan(
+                net, secondaries, host, overlap_rows, ratios, caps, auto_reduce
+            )
+            _check_plan_messages(plan)
+            return plan
+        except PlanInfeasible as exc:
+            if not auto_reduce or not _reduce_caps(caps, exc, conv_anchor):
+                raise
+    raise AssertionError("auto-reduce failed to converge")  # pragma: no cover
+
+
+def _reduce_caps(caps: list[int], exc: PlanInfeasible, conv_anchor: list[int]) -> bool:
+    """Shrink the active-secondary cap at the first reducible layer the
+    violation names; False when every candidate is already at one secondary
+    (the 'even N=1 fails' terminal case)."""
+    for j in exc.reduce_at:
+        if not 0 <= j < len(caps):
+            continue
+        j = conv_anchor[j]
+        eff = min(caps[: j + 1])
+        if eff > 1:
+            caps[j] = eff - 1
+            return True
+    return False
+
+
+def _build_plan(
+    net: ConvNetGeom,
+    secondaries: tuple[str, ...],
+    host: str,
+    overlap_rows: int,
+    ratios: Sequence[float],
+    caps: Sequence[int],
+    auto_reduce: bool,
+) -> HALPPlan:
+    n_sec = len(secondaries)
     k_zones = n_sec - 1
     zone_names = (
         (host,) if k_zones == 1 else tuple(f"{host}#{j}" for j in range(k_zones))
@@ -307,8 +431,12 @@ def plan_halp_n(
 
     sizes = net.sizes()
     parts: list[LayerPartition] = []
+    active = n_sec
     for i, g in enumerate(net.layers):
         o = sizes[i + 1]
+        if auto_reduce:
+            # monotone: a cap at any earlier layer (pools included) holds on
+            active = min(active, caps[i])
         if g.kind == "pool":
             # pools inherit the previous layer's boundaries (divided by stride).
             prev = parts[-1].out
@@ -320,7 +448,23 @@ def plan_halp_n(
                 lo = hi + 1
         else:
             align = _pool_alignment(net, i, o)
-            counts = _conv_slot_rows(o, overlap_rows, ratios, align)
+            if not auto_reduce:
+                counts = _conv_slot_rows(o, overlap_rows, ratios, align)
+            else:
+                while True:
+                    try:
+                        counts = _reduced_slot_rows(o, overlap_rows, ratios, align, active)
+                        break
+                    except ValueError as err:
+                        if active <= 1:
+                            raise PlanInfeasible(
+                                i,
+                                f"layer {i} ({o} output rows): {err}; even a single "
+                                f"active secondary does not fit -- use a larger input "
+                                f"or run this layer on one ES",
+                                reduce_at=(i,),
+                            ) from err
+                        active -= 1
             out = {}
             lo = 1
             for slot, cnt in zip(slots, counts):
@@ -335,15 +479,13 @@ def plan_halp_n(
             for es, seg in out.items()
         }
         parts.append(LayerPartition(index=i, out=out, inp=inp))
-    plan = HALPPlan(
+    return HALPPlan(
         net=net,
         parts=tuple(parts),
         es_names=tuple(slots),
         host=host,
         slot_owner=tuple(owners),
     )
-    _check_no_slot_skip(plan)
-    return plan
 
 
 def plan_halp_topology(
@@ -351,6 +493,7 @@ def plan_halp_topology(
     topology: "CollabTopology",
     overlap_rows: int = 4,
     ratios: Sequence[float] | None = None,
+    auto_reduce: bool = True,
 ) -> HALPPlan:
     """HALP plan for a :class:`~repro.core.topology.CollabTopology`.
 
@@ -364,6 +507,7 @@ def plan_halp_topology(
         host=topology.host,
         overlap_rows=overlap_rows,
         ratios=ratios,
+        auto_reduce=auto_reduce,
     )
 
 
@@ -388,26 +532,51 @@ def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
     return HALPPlan(net=net, parts=tuple(parts), es_names=names)
 
 
-def _check_no_slot_skip(plan: HALPPlan) -> None:
-    """Non-adjacent slots must never exchange rows.  In particular two
-    secondaries never talk directly -- all boundary traffic crosses a host
-    zone, the invariant the whole HALP schedule rests on."""
+def _check_plan_messages(plan: HALPPlan) -> None:
+    """Enforce the message invariants both latency engines rely on.
+
+    * **Secondaries never exchange rows directly** (the scheme's hard
+      invariant -- there is no secondary-secondary link).  Violations mean a
+      slot is too thin for the receptive field: widen the overlap zone,
+      rebalance the ratios, or let auto-reduction drop the slot.
+    * **Host-zone -> secondary messages must come from an adjacent slot**:
+      the zone chunk schedule (``events.zone_step``) only prices sends to the
+      two neighbouring secondaries, so a skip there would be unpriced.
+    * Secondary -> host messages may target *any* zone (physically a direct
+      uplink; ``events.sec_step`` prices sends to every zone), and rows moving
+      between two host-owned zones never leave the host (a local move; the
+      host computes layers in submission order, so the rows are resident)."""
     order = {s: j for j, s in enumerate(plan.es_names)}
+    host = plan.host
     for i in range(len(plan.parts) - 1):
         for a in plan.es_names:
+            owner_a = plan.owner_of(a)
             for b in plan.es_names:
-                if abs(order[a] - order[b]) <= 1:
+                if a == b:
                     continue
-                if plan.owner_of(a) == plan.owner_of(b) == plan.host:
-                    # zone-to-zone rows never leave the host (a local move
-                    # across an ultra-thin secondary at a tiny feature map);
-                    # the host computes layers in submission order, so the
-                    # rows are always resident when needed.
-                    continue
+                owner_b = plan.owner_of(b)
+                if owner_a == owner_b == host:
+                    continue  # zone-to-zone: host-local move
+                if owner_a != host and owner_b == host:
+                    continue  # sec -> any host zone: direct uplink, priced
+                adjacent = abs(order[a] - order[b]) <= 1
+                if adjacent and (owner_a == host) != (owner_b == host):
+                    continue  # adjacent host<->sec: the paper's boundary flow
                 seg = plan.message(i, a, b)
-                if seg:
-                    raise AssertionError(
-                        f"layer {i}: slot {a} would need to send rows "
-                        f"{seg.lo}..{seg.hi} to non-adjacent {b}; widen the "
-                        f"overlap zone or rebalance the segment ratios"
+                if not seg:
+                    continue
+                if owner_a != host and owner_b != host:
+                    raise PlanInfeasible(
+                        i,
+                        f"layer {i}: secondaries {a} and {b} would exchange rows "
+                        f"{seg.lo}..{seg.hi} directly; widen the overlap zone, "
+                        f"rebalance the segment ratios, or enable auto_reduce",
+                        reduce_at=(i + 1, i),
                     )
+                raise PlanInfeasible(
+                    i,
+                    f"layer {i}: zone {a} would need to send rows "
+                    f"{seg.lo}..{seg.hi} to non-adjacent secondary {b}; widen "
+                    f"the overlap zone or rebalance the segment ratios",
+                    reduce_at=(i + 1, i),
+                )

@@ -290,7 +290,16 @@ class ReplanController:
     Implements the same planner protocol as :class:`StaticPlanner`
     (``observe_transfer`` + ``plan_for_epoch``), so
     :func:`~repro.core.simulator.replay_rate_trace` and the serving loop drive
-    either interchangeably."""
+    either interchangeably.
+
+    Subclasses may override :meth:`_optimize` to swap what is recomputed on a
+    bucket switch (e.g. :class:`~repro.core.placement.PlacementController`
+    re-places *every task* instead of re-optimising one shared plan); the
+    estimator, bucketing, hysteresis, cache, and telemetry are inherited
+    unchanged.  ``_cache_kind`` namespaces cache keys so different controller
+    kinds can share one :class:`PlanCache`."""
+
+    _cache_kind = "plan"
 
     def __init__(
         self,
@@ -309,6 +318,7 @@ class ReplanController:
         # indices are grid-relative, so bucket_frac in particular must key) --
         # controllers with different configs can then share one PlanCache
         self._fingerprint = (
+            self._cache_kind,
             topology_fingerprint(topology),
             config.bucket_frac,
             config.n_tasks,
@@ -369,9 +379,14 @@ class ReplanController:
         self.replans += 1
         return True
 
+    def _optimize(self, topology: CollabTopology) -> OptimizeResult:
+        """Recompute the operating point for ``topology`` (cache-miss path).
+        Subclasses override this to re-place instead of re-plan."""
+        return _optimize_against(self.net, topology, self.config)
+
     def current(self) -> OptimizeResult:
         """The active operating point's plan: an O(1) cache hit in steady
-        state, a fresh :func:`optimize_plan` run on a miss.
+        state, a fresh :meth:`_optimize` run on a miss.
 
         This is the *per-epoch* entry point and the one place hit/miss
         telemetry is counted; out-of-epoch reads (``plan``, ``makespan``, the
@@ -379,7 +394,7 @@ class ReplanController:
         key = (self._fingerprint, self._active)
         result = self.cache.get(key)
         if result is None:
-            result = _optimize_against(self.net, self.estimated_topology(), self.config)
+            result = self._optimize(self.estimated_topology())
             self.optimizer_calls += 1
             self.cache.put(key, result)
         return result

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Mapping
+from typing import Mapping, Sequence
 
 __all__ = ["Platform", "Link", "CollabTopology"]
 
@@ -112,6 +112,28 @@ class CollabTopology:
             pairs.append((self.host, s))
             pairs.append((s, self.host))
         return tuple(pairs)
+
+    def sub_topology(self, secondaries: Sequence[str]) -> "CollabTopology":
+        """This pool restricted to ``secondaries`` (same host, same rates).
+
+        The subset keeps the *given* order -- it becomes the row order of the
+        sub-cluster's plan, so callers (e.g. the per-task placement engine)
+        can put faster ESs first and let thin-layer auto-reduction shed the
+        weakest members.  Links touching dropped ESs are filtered out."""
+        secs = tuple(secondaries)
+        if len(set(secs)) != len(secs):
+            raise ValueError(f"duplicate secondaries in subset: {secs}")
+        for s in secs:
+            if s not in self.secondaries:
+                raise ValueError(f"{s!r} is not a secondary of this topology")
+        keep = {self.host, *secs}
+        return CollabTopology(
+            host=self.host,
+            secondaries=secs,
+            platforms={es: self.platforms[es] for es in keep},
+            links={p: l for p, l in self.links.items() if p[0] in keep and p[1] in keep},
+            default_link=self.default_link,
+        )
 
     def with_links(
         self,

@@ -13,6 +13,12 @@ The engine closes the measurement loop of the online re-planner
 an optional observer -- typically ``ReplanController.observe_batch_latency``
 -- and ``plan_aware_batch_size`` re-runs the admission policy against the
 *current* plan's predicted makespan, so the admitted batch tracks the channel.
+The same loop drives per-task placement
+(``repro.core.placement.PlacementController``): a bucket switch re-places
+every task over the shared ES pool, and the controller's
+``predicted_latency`` prices a candidate batch by simulating its tasks on
+that pool -- including the queueing of tasks that wrap onto the same
+secondaries -- so admission follows both the channel and the placement.
 """
 from __future__ import annotations
 
@@ -161,11 +167,13 @@ def plan_aware_batch_size(
 ) -> int:
     """``choose_batch_size`` against the *current* plan's predicted makespan.
 
-    ``controller`` is a :class:`~repro.core.replan.ReplanController`: its
-    ``predicted_latency(b)`` prices a b-task batch with the closed form on the
-    plan the controller is serving right now (calibrated by measured batch
-    latencies), so after a re-plan the admitted batch size follows the new
-    plan without re-measuring a latency curve."""
+    ``controller`` is a :class:`~repro.core.replan.ReplanController` or a
+    :class:`~repro.core.placement.PlacementController`: its
+    ``predicted_latency(b)`` prices a b-task batch on whatever the controller
+    is serving right now -- the closed form on the shared plan, or the
+    shared-pool DES over the per-task placement (calibrated by measured batch
+    latencies either way) -- so after a re-plan or re-placement the admitted
+    batch size follows without re-measuring a latency curve."""
     return choose_batch_size(
         controller.predicted_latency, deadline_s, channel, target=target, max_batch=max_batch
     )

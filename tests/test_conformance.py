@@ -1,0 +1,149 @@
+"""Closed-form vs DES conformance grid (paper eqs. 16-20 / 22-23).
+
+One systematic cross-validation replaces the per-feature spot checks that used
+to live in test_schedule/test_topology: every (cluster size, link/platform
+skew, task count) cell asserts the closed-form recursion stays an **upper
+bound** on the exact discrete-event simulation, within a **pinned slack** --
+the bound's measured looseness at the time it was pinned.  A future change
+that silently loosens (or breaks the bound direction of) either engine fails
+the grid immediately.
+
+Also pinned here: the tightened multi-task host term (``multitask_bound=
+"list"``) is never looser than the paper's eq. 22 (``"eq22"``) anywhere on
+the grid, and strictly tighter where K > 1 zones meet asymmetric links.
+"""
+import pytest
+
+from repro.core import (
+    AGX_XAVIER,
+    GTX_1080TI,
+    CollabTopology,
+    Link,
+    halp_closed_form,
+    simulate_halp,
+    standalone_time,
+    vgg16_geom,
+)
+from repro.core.simulator import Sim
+
+NET = vgg16_geom()
+
+# Bound-direction tolerance: the closed form must not dip below the DES by
+# more than float noise anywhere on the grid.
+LOWER_TOL = 1e-9
+
+SKEW_SCALES = (1.0, 0.5, 0.8, 0.3, 0.65)
+
+
+def sym_topology(n: int, platform=GTX_1080TI) -> CollabTopology:
+    return CollabTopology.symmetric(platform, Link(40e9), n_secondaries=n)
+
+
+def skew_topology(n: int) -> CollabTopology:
+    """Heterogeneous platforms (x1.0 .. x0.3) with alternating 40/10 Gbps
+    links -- the regime where eq. 22's worst-case terms are loosest."""
+    secs = tuple(f"e{j}" for j in range(1, n + 1))
+    platforms = {"e0": GTX_1080TI}
+    links = {}
+    for j, (s, scale) in enumerate(zip(secs, SKEW_SCALES)):
+        platforms[s] = GTX_1080TI.scaled(scale, f"es x{scale:g}")
+        rate = 10e9 if j % 2 else 40e9
+        links[("e0", s)] = Link(rate)
+        links[(s, "e0")] = Link(rate)
+    return CollabTopology(
+        host="e0", secondaries=secs, platforms=platforms,
+        links=links, default_link=Link(40e9),
+    )
+
+
+TOPOLOGIES = {
+    "sym": sym_topology,
+    "skew": skew_topology,
+    "sym-agx": lambda n: sym_topology(n, AGX_XAVIER),
+}
+
+# Pinned upper slack per cell: measured closed-form/DES ratio at pin time
+# (see the PR that introduced this file) plus ~3-5% headroom.  The bound
+# loosens with zone count K and link skew; that structure should survive
+# refactors -- a cell blowing its slack means an engine changed behaviour.
+UPPER_SLACK = {
+    # (n_secondaries, kind, n_tasks): max allowed cf/ev
+    (2, "sym", 1): 1.05, (2, "sym", 4): 1.11,
+    (2, "skew", 1): 1.06, (2, "skew", 4): 1.26,
+    (2, "sym-agx", 1): 1.04, (2, "sym-agx", 4): 1.05,
+    (3, "sym", 1): 1.09, (3, "sym", 4): 1.11,
+    (3, "skew", 1): 1.15, (3, "skew", 4): 1.49,
+    (3, "sym-agx", 1): 1.05, (3, "sym-agx", 4): 1.05,
+    (5, "sym", 1): 1.11, (5, "sym", 4): 1.08,
+    (5, "skew", 1): 1.14, (5, "skew", 4): 1.22,
+    (5, "sym-agx", 1): 1.05, (5, "sym-agx", 4): 1.05,
+}
+
+GRID = sorted(UPPER_SLACK)
+
+
+@pytest.mark.parametrize("n_sec,kind,n_tasks", GRID)
+def test_closed_form_upper_bounds_des_within_pinned_slack(n_sec, kind, n_tasks):
+    topo = TOPOLOGIES[kind](n_sec)
+    cf = halp_closed_form(NET, topology=topo, n_tasks=n_tasks)["total"]
+    ev = simulate_halp(NET, topology=topo, n_tasks=n_tasks)["total"]
+    assert cf >= ev * (1.0 - LOWER_TOL), (
+        f"closed form lost the upper-bound property: cf={cf} < ev={ev}"
+    )
+    slack = UPPER_SLACK[(n_sec, kind, n_tasks)]
+    assert cf <= ev * slack, (
+        f"closed form loosened past its pinned slack {slack}: cf/ev={cf / ev:.4f}"
+    )
+
+
+@pytest.mark.parametrize("n_sec,kind,n_tasks", GRID)
+def test_tightened_bound_never_looser_than_eq22(n_sec, kind, n_tasks):
+    """The list-scheduling multi-task host term is term-by-term <= eq. 22,
+    and identical to it for a single task (where both reduce to eq. 18)."""
+    topo = TOPOLOGIES[kind](n_sec)
+    tight = halp_closed_form(NET, topology=topo, n_tasks=n_tasks)["total"]
+    legacy = halp_closed_form(
+        NET, topology=topo, n_tasks=n_tasks, multitask_bound="eq22"
+    )["total"]
+    assert tight <= legacy + 1e-15, (tight, legacy)
+    if n_tasks == 1:
+        assert tight == legacy
+
+
+def test_tightened_bound_strictly_tighter_where_k_gt_1():
+    """With K > 1 zones and skewed links the tightening is strict (the whole
+    point of generalising eq. 22 for the multi-zone case)."""
+    for n_sec in (3, 5):
+        topo = skew_topology(n_sec)
+        tight = halp_closed_form(NET, topology=topo, n_tasks=4)["total"]
+        legacy = halp_closed_form(
+            NET, topology=topo, n_tasks=4, multitask_bound="eq22"
+        )["total"]
+        assert tight < legacy, (n_sec, tight, legacy)
+
+
+def test_multitask_bound_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="multitask_bound"):
+        halp_closed_form(NET, GTX_1080TI, Link(40e9), multitask_bound="magic")
+
+
+@pytest.mark.parametrize("n_tasks", [1, 4])
+def test_degenerate_single_es_exact(n_tasks):
+    """N = 1 cell of the grid: no collaboration at all.  The closed form is
+    t_pre x n_tasks (eq. 21's denominator), and a single-resource DES chain
+    reproduces it exactly -- both engines share the FLOP model, so this cell
+    must be equality, not a bound."""
+    t_pre = standalone_time(NET, GTX_1080TI)
+    sim = Sim()
+    prev = None
+    sizes = NET.sizes()
+    for _ in range(n_tasks):
+        for i, g in enumerate(NET.layers):
+            prev = sim.add(
+                f"g{i}", "e0",
+                GTX_1080TI.compute_time(g.flops_per_out_row(sizes[i + 1]) * sizes[i + 1]),
+                [prev],
+            )
+        prev = sim.add("head", "e0", GTX_1080TI.compute_time(NET.head_flops), [prev])
+    total = sim.run()
+    assert total == pytest.approx(t_pre * n_tasks, rel=1e-12)

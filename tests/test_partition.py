@@ -6,7 +6,18 @@ except ImportError:  # container image without hypothesis: deterministic shim
     from _hypothesis_fallback import given, settings, st
 
 from repro.core.nets import vgg16_geom
-from repro.core.partition import E0, E1, E2, Segment, plan_even, plan_halp, split_rows
+from repro.core.partition import (
+    E0,
+    E1,
+    E2,
+    PlanInfeasible,
+    Segment,
+    _reduce_caps,
+    plan_even,
+    plan_halp,
+    plan_halp_n,
+    split_rows,
+)
 
 
 def test_split_rows_covers_exactly():
@@ -108,6 +119,68 @@ def test_message_bytes_match_eq11_form():
         assert plan.message_bytes(i - 1, E0, E1) == expected
         checked += 1
     assert checked >= 4
+
+
+def test_feasibility_boundary_pinned_vgg16():
+    """Regression-pin the jagged feasibility boundary in N on VGG-16, so
+    future partitioner changes cannot silently shift it:
+
+    * N=5 and N=8 never trigger auto-reduction -- the strict-isolation plan
+      is identical to the default one (their thin layers degrade via
+      *idle slots* only: N=5 idles two slots at g16-17, N=8 idles e5 at the
+      14x14 block and hands the whole 14-row layers to the host),
+    * N=6 is the jagged hole: strict mode raises at the 14-row depth, the
+      default auto-reduces to one active secondary there with the host
+      absorbing the tail."""
+    net = vgg16_geom()
+    sizes = net.sizes()
+
+    # --- N=5 / N=8: idle-slot degradation only; auto-reduce is a no-op
+    for n in (5, 8):
+        secs = tuple(f"e{j}" for j in range(1, n + 1))
+        default = plan_halp_n(net, secondaries=secs, overlap_rows=4)
+        strict = plan_halp_n(net, secondaries=secs, overlap_rows=4, auto_reduce=False)
+        for a, b in zip(default.parts, strict.parts):
+            assert a.out == b.out, (n, a.index)
+
+    plan5 = plan_halp_n(net, secondaries=tuple(f"e{j}" for j in range(1, 6)))
+    assert plan5.active_secondaries(15) == ("e1", "e2", "e3", "e4", "e5")
+    assert plan5.active_secondaries(16) == ("e1", "e3", "e5")  # e2/e4 idle
+    assert plan5.active_secondaries(17) == ("e1", "e3", "e5")
+
+    plan8 = plan_halp_n(net, secondaries=tuple(f"e{j}" for j in range(1, 9)))
+    for layer in (12, 13, 14, 15):
+        assert "e5" not in plan8.active_secondaries(layer)
+        assert len(plan8.active_secondaries(layer)) == 7
+    # the 14-row layers fit 7 host zones + nothing else: host owns everything
+    assert plan8.active_secondaries(16) == ()
+    assert sum(plan8.parts[16].out[z].rows for z in plan8.zone_slots) == sizes[17]
+
+    # --- N=6: the hole.  Strict mode raises (the pre-PR boundary) ...
+    with pytest.raises(PlanInfeasible, match="exchange rows"):
+        plan_halp_n(
+            net, secondaries=tuple(f"e{j}" for j in range(1, 7)), auto_reduce=False
+        )
+    # ... and the default reduces g16-17 to one active secondary + host tail.
+    plan6 = plan_halp_n(net, secondaries=tuple(f"e{j}" for j in range(1, 7)))
+    acts = [len(plan6.active_secondaries(i)) for i in range(len(plan6.parts))]
+    assert acts == [6] * 16 + [1, 1]
+    assert plan6.parts[16].out["e1"] == Segment(1, 2)
+    assert plan6.parts[16].out["e0#0"] == Segment(3, 14)  # host-owned tail
+    for s in ("e2", "e3", "e4", "e5", "e6"):
+        assert not plan6.parts[16].out[s]
+
+
+def test_auto_reduce_terminal_case_raises():
+    """_reduce_caps refuses once every candidate layer is down to one active
+    secondary -- the 'even N=1 fails' terminal that keeps the loud raise."""
+    exc = PlanInfeasible(0, "x", reduce_at=(1, 0))
+    caps = [2, 2]
+    assert _reduce_caps(caps, exc, [0, 1]) is True and caps == [2, 1]
+    assert _reduce_caps(caps, exc, [0, 1]) is True and caps == [1, 1]
+    assert _reduce_caps(caps, exc, [0, 1]) is False  # both candidates at 1
+    # out-of-range candidates are skipped, not crashed on
+    assert _reduce_caps([3], PlanInfeasible(0, "x", reduce_at=(5,)), [0]) is False
 
 
 def test_plan_even_tiles():

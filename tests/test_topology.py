@@ -186,62 +186,37 @@ def test_thin_layers_idle_low_ratio_secondaries():
 
 
 def test_optimizer_all_infeasible_raises_clearly():
+    """With auto-reduction disabled, an oversized cluster has no strictly
+    isolating plan and the optimizer must say so (the old error path).  With
+    the default graceful degradation the same search succeeds."""
     topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=16)
     with pytest.raises(ValueError, match="no feasible HALP plan"):
-        optimize_plan(NET, topo, overlap_choices=(4,), max_rounds=1)
+        optimize_plan(NET, topo, overlap_choices=(4,), max_rounds=1, auto_reduce=False)
+    res = optimize_plan(NET, topo, overlap_choices=(4,), max_rounds=1)
+    assert math.isfinite(res.makespan)
 
 
-def test_too_many_secondaries_raises():
-    """16 secondaries + 15 zones cannot fit VGG-16's 14-row deep layers."""
+def test_too_many_secondaries_strict_mode_raises():
+    """Without auto-reduction, 16 secondaries + 15 zones cannot fit VGG-16's
+    14-row deep layers, and 6-way breaks isolation at the same depth -- both
+    must fail loudly, with the remediation in the message.  (The default
+    auto-reduce behaviour for the same clusters is pinned in
+    tests/test_partition.py::test_feasibility_boundary_pinned_vgg16.)"""
     with pytest.raises((AssertionError, ValueError)):
-        plan_halp_n(NET, secondaries=tuple(f"e{j}" for j in range(1, 17)))
-    # 6-way also fails on this net (thin slots at g13-15 break isolation) --
-    # but loudly, with the remediation in the message, never silently.
-    with pytest.raises(AssertionError, match="widen the overlap zone"):
-        plan_halp_n(NET, secondaries=tuple(f"e{j}" for j in range(1, 7)))
+        plan_halp_n(
+            NET, secondaries=tuple(f"e{j}" for j in range(1, 17)), auto_reduce=False
+        )
+    with pytest.raises(ValueError, match="widen the overlap zone"):
+        plan_halp_n(
+            NET, secondaries=tuple(f"e{j}" for j in range(1, 7)), auto_reduce=False
+        )
 
 
 # ---------------------------------------------------------------------------
-# closed form vs. simulator on asymmetric platforms/links
+# closed form vs. simulator: the systematic cross-validation now lives in
+# tests/test_conformance.py (parametrized grid with pinned slacks); only the
+# straggler-resource plumbing check stays here.
 # ---------------------------------------------------------------------------
-
-
-def _hetero_topology():
-    slow = GTX_1080TI.scaled(0.4, "slow")
-    med = GTX_1080TI.scaled(0.7, "med")
-    return CollabTopology(
-        host="e0",
-        secondaries=("a", "b", "c"),
-        platforms={"e0": GTX_1080TI, "a": GTX_1080TI, "b": slow, "c": med},
-        links={("e0", "b"): Link(10e9), ("b", "e0"): Link(10e9)},
-        default_link=Link(40e9),
-    )
-
-
-def test_closed_form_matches_simulator_nway_symmetric():
-    for n in (3, 4, 5):
-        topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=n)
-        cf = halp_closed_form(NET, topology=topo)["total"]
-        ev = simulate_halp(NET, topology=topo)["total"]
-        assert abs(cf - ev) / ev < 0.10, (n, cf, ev)
-
-
-def test_closed_form_matches_simulator_heterogeneous():
-    topo = _hetero_topology()
-    cf = halp_closed_form(NET, topology=topo)["total"]
-    ev = simulate_halp(NET, topology=topo)["total"]
-    assert abs(cf - ev) / ev < 0.10, (cf, ev)
-
-
-def test_closed_form_upper_bounds_simulator_multitask():
-    """Eq. (22) is an upper bound (host zones fully serialised); it loosens
-    with more zones but must stay a bound and within 35% on this cluster."""
-    topo = _hetero_topology()
-    for n_tasks in (2, 4):
-        cf = halp_closed_form(NET, topology=topo, n_tasks=n_tasks)["total"]
-        ev = simulate_halp(NET, topology=topo, n_tasks=n_tasks)["total"]
-        assert cf >= 0.95 * ev, (n_tasks, cf, ev)
-        assert cf <= 1.35 * ev, (n_tasks, cf, ev)
 
 
 def test_straggler_slot_resources_nway():
@@ -290,7 +265,11 @@ def test_optimizer_on_symmetric_cluster_stays_near_equal():
 
 def test_evaluate_plan_infeasible_is_inf():
     topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=16)
-    assert evaluate_plan(NET, topo, equal_ratios(topo), 4) == float("inf")
+    assert evaluate_plan(
+        NET, topo, equal_ratios(topo), 4, auto_reduce=False
+    ) == float("inf")
+    # graceful degradation makes the same cluster priceable
+    assert math.isfinite(evaluate_plan(NET, topo, equal_ratios(topo), 4))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,87 @@
+"""Measure line coverage of src/repro without coverage.py installed.
+
+The CI coverage gate (``pytest --cov=repro --cov-fail-under=...``) needs a
+pinned floor, but the development container ships neither ``coverage`` nor
+``pytest-cov``.  This tool approximates coverage.py's statement coverage with
+a ``sys.settrace`` tracer restricted to ``src/repro`` files: executed lines
+are collected per file, executable lines are recovered from the compiled
+code objects (``dis.findlinestarts``, recursively), and the ratio is printed
+as JSON.  Differences vs coverage.py are small (a few tenths of a percent,
+e.g. around ``TYPE_CHECKING`` blocks), which is why the CI floor is pinned a
+few points *below* the number printed here.
+
+Usage::
+
+    python tools/measure_coverage.py [pytest args...]
+
+Runs the full tier-1 suite by default; pass a subset of test files to get a
+cheaper lower bound (a subset can only under-count coverage).
+"""
+from __future__ import annotations
+
+import dis
+import json
+import pathlib
+import sys
+import threading
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+PREFIX = str(ROOT / "src" / "repro") + "/"
+
+executed: dict[str, set[int]] = {}
+
+
+def _tracer(frame, event, arg):
+    filename = frame.f_code.co_filename
+    if not filename.startswith(PREFIX):
+        return None
+    lines = executed.setdefault(filename, set())
+    lines.add(frame.f_lineno)
+
+    def local(frame, event, arg):
+        if event == "line":
+            lines.add(frame.f_lineno)
+        return local
+
+    return local
+
+
+def _code_lines(code) -> set[int]:
+    lines = {line for _, line in dis.findlinestarts(code) if line is not None}
+    for const in code.co_consts:
+        if hasattr(const, "co_code"):
+            lines |= _code_lines(const)
+    return lines
+
+
+def main(argv: list[str]) -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    import pytest
+
+    sys.settrace(_tracer)
+    threading.settrace(_tracer)
+    rc = pytest.main(["-q", "-p", "no:cacheprovider", *argv])
+    sys.settrace(None)
+    threading.settrace(None)
+
+    total = covered = 0
+    per_file = {}
+    for path in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        code = compile(path.read_text(), str(path), "exec")
+        lines = _code_lines(code)
+        hit = len(lines & executed.get(str(path), set()))
+        per_file[str(path.relative_to(ROOT))] = (hit, len(lines))
+        total += len(lines)
+        covered += hit
+    print(json.dumps(dict(
+        pytest_exit=int(rc),
+        covered=covered,
+        total=total,
+        pct=round(100.0 * covered / total, 2),
+        worst=sorted(per_file.items(), key=lambda kv: kv[1][0] / max(1, kv[1][1]))[:10],
+    ), indent=2))
+    return int(rc)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
