@@ -1,0 +1,229 @@
+"""Planner-latency benchmark: batched DAG-template engine vs the scalar path.
+
+HALP's value is *online*: the replan/placement controllers re-optimise on
+every adopted rate-bucket switch, so the planner's own wall-clock latency is
+a serving-path quantity, not a tooling nicety.  This benchmark tracks it
+across the three planner entry points, comparing the batched engine (plan
+layouts + cached DAG templates + ``Sim.run_batch``; see
+``repro.core.events``) against the pre-template scalar path (full plan build
++ DAG build + scalar DES per candidate), which stays callable via
+``engine="scalar"``:
+
+* **optimize_single** -- single-task ``optimize_plan`` on the canonical
+  heterogeneous pair (fast+slow secondary, 40 vs 8 Gbps links -- the
+  Table-IV cluster of ``benchmarks/hetero_sweep.py``).
+* **place_4task**    -- 4-task ``place_tasks`` on the skewed 8-ES pool of
+  ``benchmarks/multitask_placement.py`` (swap search + per-task refinement).
+* **replan_storm**   -- a drifting channel forcing a fresh ``optimize_plan``
+  per epoch against new rates (the plan-cache *miss* path of
+  ``repro.core.replan``): per-epoch planning latency under realistic reuse
+  (layouts/templates are rate-independent, so the storm hits their caches
+  exactly as a live controller would).
+
+Both engines share one search loop and price candidates bit-identically, so
+every scenario also asserts the returned plans are *equal* -- the speedup is
+pure pricing, not a different search.  Timings are wall-clock per call; each
+engine's first call pays the one-off template/layout builds and is reported
+separately (``cold_ms``), medians are over the steady-state repeats -- the
+per-replan latency an online controller actually sees.
+
+Emits ``BENCH_planner.json`` (``--out`` to move it, ``--smoke`` for the CI
+artifact run).  Acceptance (tests/test_benchmarks.py): plans equal in every
+scenario and the speedup floors hold.  CSV rows
+(``name,us_per_call,derived``) match the other benchmarks' format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    GTX_1080TI,
+    CollabTopology,
+    Link,
+    optimize_plan,
+    place_tasks,
+    vgg16_geom,
+)
+from repro.core.simulator import GaussMarkovTrace  # noqa: E402
+
+try:  # either invocation style: `python benchmarks/planner_speed.py` or module
+    from benchmarks.multitask_placement import build_pool  # noqa: E402
+except ModuleNotFoundError:  # pragma: no cover - direct-script path setup
+    sys.path.insert(0, "benchmarks")
+    from multitask_placement import build_pool  # noqa: E402
+
+NET = vgg16_geom()
+FAST_BPS = 40e9
+SLOW_BPS = 8e9
+
+
+def hetero_pair() -> CollabTopology:
+    """The Table-IV heterogeneous pair: one full-speed secondary on a fast
+    link, one 0.35x secondary behind a slow link."""
+    slow = GTX_1080TI.scaled(0.35, "slow")
+    return CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        links={
+            ("e0", "fast"): Link(FAST_BPS),
+            ("fast", "e0"): Link(FAST_BPS),
+            ("e0", "slow"): Link(SLOW_BPS),
+            ("slow", "e0"): Link(SLOW_BPS),
+        },
+        default_link=Link(FAST_BPS),
+    )
+
+
+def _timed(fn) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e3, out
+
+
+def _plan_key(res) -> tuple:
+    return (res.ratios, res.overlap_rows, res.makespan)
+
+
+def _placement_key(res) -> tuple:
+    return (res.placement.assignments, res.knobs, res.makespan, res.avg_delay)
+
+
+def _scenario(
+    times: dict[str, list[float]],
+    cold: dict[str, float],
+    equal: bool,
+    evals: dict[str, int],
+) -> dict:
+    med_b = statistics.median(times["batched"])
+    med_s = statistics.median(times["scalar"])
+    return dict(
+        batched_ms=times["batched"],
+        scalar_ms=times["scalar"],
+        cold_ms=cold,
+        median_batched_ms=med_b,
+        median_scalar_ms=med_s,
+        speedup=med_s / med_b,
+        plans_equal=equal,
+        evaluations=evals,
+    )
+
+
+def _bench_call(call, key_of, repeats: int) -> dict:
+    """Per engine: one cold call (first template/layout builds, reported
+    separately -- online controllers pay it once per cluster lifetime), then
+    ``repeats`` timed steady-state calls, which is the per-replan latency the
+    serving loop actually sees."""
+    times = {"batched": [], "scalar": []}
+    cold = {}
+    keys = []
+    evals = {}
+    for engine in ("batched", "scalar"):
+        ms, res = _timed(lambda: call(engine))
+        cold[engine] = ms
+        keys.append(key_of(res))
+        for _ in range(repeats):
+            ms, res = _timed(lambda: call(engine))
+            times[engine].append(ms)
+            keys.append(key_of(res))
+        evals[engine] = res.evaluations
+    return _scenario(times, cold, len(set(keys)) == 1, evals)
+
+
+def bench_optimize_single(repeats: int) -> dict:
+    topo = hetero_pair()
+    return _bench_call(
+        lambda engine: optimize_plan(NET, topo, n_tasks=1, engine=engine),
+        _plan_key,
+        repeats,
+    )
+
+
+def bench_place_4task(repeats: int) -> dict:
+    pool = build_pool()
+    return _bench_call(
+        lambda engine: place_tasks(NET, pool, 4, engine=engine),
+        _placement_key,
+        repeats,
+    )
+
+
+def bench_replan_storm(epochs: int) -> dict:
+    """Fresh single-task optimisation per epoch against drifted link rates --
+    the latency a controller pays on every plan-cache miss."""
+    base = hetero_pair()
+    fast = GaussMarkovTrace(lo=10e9, hi=40e9, seed=7).rates(epochs)
+    slow = GaussMarkovTrace(lo=2e9, hi=10e9, seed=11).rates(epochs)
+    topos = [
+        base.with_links(
+            {
+                ("e0", "fast"): Link(rf),
+                ("fast", "e0"): Link(rf),
+                ("e0", "slow"): Link(rs),
+                ("slow", "e0"): Link(rs),
+            }
+        )
+        for rf, rs in zip(fast, slow)
+    ]
+    times = {"batched": [], "scalar": []}
+    cold = {}
+    equal = True
+    evals = {"batched": 0, "scalar": 0}
+    for epoch, topo in enumerate(topos):
+        ms_b, rb = _timed(lambda: optimize_plan(NET, topo, n_tasks=1, engine="batched"))
+        ms_s, rs_ = _timed(lambda: optimize_plan(NET, topo, n_tasks=1, engine="scalar"))
+        if epoch == 0:  # first epoch of a fresh cluster: template/layout builds
+            cold = {"batched": ms_b, "scalar": ms_s}
+        else:
+            times["batched"].append(ms_b)
+            times["scalar"].append(ms_s)
+        equal = equal and _plan_key(rb) == _plan_key(rs_)
+        evals["batched"] += rb.evaluations
+        evals["scalar"] += rs_.evaluations
+    return _scenario(times, cold, equal, evals)
+
+
+def run_all(smoke: bool = False, out_path: str | None = "BENCH_planner.json") -> dict:
+    repeats = 3 if smoke else 5
+    epochs = 5 if smoke else 12
+    scenarios = {
+        "optimize_single": bench_optimize_single(repeats),
+        "place_4task": bench_place_4task(2 if smoke else 3),
+        "replan_storm": bench_replan_storm(epochs),
+    }
+    out = dict(
+        config=dict(smoke=smoke, repeats=repeats, storm_epochs=epochs, net=NET.name),
+        floors=dict(optimize_single=10.0, place_4task=5.0),
+        scenarios=scenarios,
+    )
+    print("\n== Planner latency: batched DAG-template engine vs scalar path ==")
+    print(
+        f"{'scenario':16s} {'batched (ms)':>12s} {'scalar (ms)':>12s} {'speedup':>8s} "
+        f"{'cold (ms)':>10s} plans"
+    )
+    for name, sc in scenarios.items():
+        print(
+            f"{name:16s} {sc['median_batched_ms']:12.1f} {sc['median_scalar_ms']:12.1f} "
+            f"{sc['speedup']:7.1f}x {sc['cold_ms']['batched']:10.1f} "
+            f"{'equal' if sc['plans_equal'] else 'DIVERGED'}"
+        )
+        print(f"planner_{name},{sc['median_batched_ms']*1e3:.0f},{sc['speedup']:.2f}")
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"\nwrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="BENCH_planner.json")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, out_path=args.out)

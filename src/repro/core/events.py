@@ -19,10 +19,21 @@ DAG.  Both therefore see identical work and identical bytes by construction.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
 
 from .nets import ConvNetGeom, DTYPE_BYTES
-from .partition import HALPPlan, Segment, plan_halp_topology
+from .partition import (
+    HALPPlan,
+    PlanLayout,
+    Segment,
+    plan_from_layout,
+    plan_halp_topology,
+    plan_layout,
+)
 from .topology import CollabTopology
 
 __all__ = [
@@ -35,6 +46,9 @@ __all__ = [
     "resolve_halp_setup",
     "build_halp_dag",
     "build_multitask_dag",
+    "DagTemplate",
+    "HalpBatchEvaluator",
+    "MultitaskBatchEvaluator",
 ]
 
 
@@ -109,6 +123,7 @@ class ZoneStep:
     above: str  # secondary above the zone (its rows are computed first)
     below: str
     rows_for_above: int
+    rows_for_below: int
     bytes_to_above: float
     bytes_to_below: float
 
@@ -170,6 +185,7 @@ def zone_step(plan: HALPPlan, layer: int, slot: str) -> ZoneStep:
         above=above,
         below=below,
         rows_for_above=m_above.rows,
+        rows_for_below=plan.message(layer, slot, below).rows,
         bytes_to_above=plan.message_bytes(layer, slot, above),
         bytes_to_below=plan.message_bytes(layer, slot, below),
     )
@@ -225,7 +241,68 @@ def build_multitask_dag(sim, plans: list[HALPPlan], topology: CollabTopology) ->
     return _lay_halp_dag(sim, plans, topology, lambda t, s: s)
 
 
-def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res) -> list[int]:
+class _FloatPricer:
+    """Default job pricing: exact floats, bit-identical to the historical
+    inline pricing (``(num * rows) / den`` with integer-valued ``num * rows``
+    products, so factorising the numerator out cannot change a single bit).
+
+    ``num_cmp[i]`` is layer i's FLOPs per output row, ``num_msg[i]`` the
+    *bits* per boundary row of layer i's output (8 x eq. 11's bytes-per-row),
+    ``num_init`` the bits per input-image row slice (eq. 10) and ``num_head``
+    the head FLOPs -- these are the template's duration *lanes*: every job
+    duration is one of these numerators times a row count over a rate."""
+
+    def __init__(self, net: ConvNetGeom, topology: CollabTopology | None):
+        self.topology = topology
+        self.num_cmp = _row_flops(net)
+        sizes = net.sizes()
+        self.num_msg = [
+            8.0 * DTYPE_BYTES * sizes[i + 1] * g.c_out for i, g in enumerate(net.layers)
+        ]
+        self.num_init = 8.0 * DTYPE_BYTES * net.in_rows * net.in_channels
+        self.num_head = net.head_flops
+
+    def cmp(self, es: str, num: float, rows: float) -> float:
+        return (num * rows) / self.topology.platform_of(es).eff_flops
+
+    def com(self, src: str, dst: str, num: float, rows: float) -> float:
+        return (num * rows) / self.topology.link_between(src, dst).rate_bps
+
+
+class _RecordingPricer(_FloatPricer):
+    """Prices like :class:`_FloatPricer` while recording each job's duration
+    factorisation ``(numerator, rate-kind)`` in call order -- one record per
+    ``sim.add`` (the builder prices every job exactly once, as its argument).
+    The row counts themselves are *not* recorded: they are the per-candidate
+    parameters a :class:`DagTemplate` fills in from plan layouts."""
+
+    def __init__(self, net: ConvNetGeom, topology: CollabTopology):
+        super().__init__(net, topology)
+        self.nums: list[float] = []
+        self.den_kinds: list[tuple] = []
+        self.den_index: dict[tuple, int] = {}
+        self.den_ids: list[int] = []
+
+    def _record(self, num: float, kind: tuple) -> None:
+        idx = self.den_index.get(kind)
+        if idx is None:
+            idx = self.den_index[kind] = len(self.den_kinds)
+            self.den_kinds.append(kind)
+        self.nums.append(num)
+        self.den_ids.append(idx)
+
+    def cmp(self, es: str, num: float, rows: float) -> float:
+        self._record(num, ("es", es))
+        return super().cmp(es, num, rows)
+
+    def com(self, src: str, dst: str, num: float, rows: float) -> float:
+        self._record(num, ("link", src, dst))
+        return super().com(src, dst, num, rows)
+
+
+def _lay_halp_dag(
+    sim, plans: list[HALPPlan], topology: CollabTopology, sec_res, pricer=None
+) -> list[int]:
     """Shared DAG builder behind both multi-task deployments.
 
     ``sec_res(task, slot)`` names the compute resource of a secondary slot
@@ -235,14 +312,34 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
     rows-for-above chunk, sends it, then the rest, then sends below
     (eq. 18) -- a zone's chunks gate on the boundary messages it consumes
     from the previous layer.
+
+    ``pricer`` turns (numerator lane, row count, resource) into a job
+    duration; the default prices exact floats, a :class:`_RecordingPricer`
+    additionally captures the factorisation for :class:`DagTemplate`.
     """
     net = plans[0].net
     host = plans[0].host
     n_layers = len(net.layers)
-    row_flops = _row_flops(net)
+    pr = pricer if pricer is not None else _FloatPricer(net, topology)
+    num_cmp, num_msg = pr.num_cmp, pr.num_msg
 
-    def cmp_time(es: str, layer: int, rows: int) -> float:
-        return topology.platform_of(es).compute_time(row_flops[layer] * rows)
+    # Clone deployments pass the *same* plan object once per task; memoise the
+    # step walks per distinct plan so n_tasks cost only one plan-walk each.
+    step_cache: dict[tuple[int, int, str], SecStep | ZoneStep] = {}
+
+    def sec_step_of(plan: HALPPlan, i: int, s: str) -> SecStep:
+        key = (id(plan), i, s)
+        step = step_cache.get(key)
+        if step is None:
+            step = step_cache[key] = sec_step(plan, i, s)
+        return step
+
+    def zone_step_of(plan: HALPPlan, i: int, z: str) -> ZoneStep:
+        key = (id(plan), i, z)
+        step = step_cache.get(key)
+        if step is None:
+            step = step_cache[key] = zone_step(plan, i, z)
+        return step
 
     last_chunk: dict[tuple[int, str], int | None] = {}
     # (task, sec_slot, layer) -> message jobs the secondary needs before layer
@@ -256,7 +353,7 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
             jid = sim.add(
                 f"int[{t}]{s}",
                 f"link:{host}->{sec_res(t, s)}",
-                topology.link_between(host, s).comm_time(init_bytes(plan, s)),
+                pr.com(host, s, pr.num_init, plan.parts[0].inp[s].rows),
             )
             sec_gate[(t, s, 0)] = [jid]
 
@@ -264,19 +361,19 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
         # --- secondaries: dep chunk first, then rest; send dep while resting.
         for t, plan in enumerate(plans):
             for s in plan.secondary_slots:
-                step = sec_step(plan, i, s)
+                step = sec_step_of(plan, i, s)
                 deps = [last_chunk.get((t, s))] + sec_gate.get((t, s, i), [])
                 a = sim.add(
                     f"cmp[{t}]{s}.g{i}.dep",
                     sec_res(t, s),
-                    cmp_time(s, i, step.dep_rows),
+                    pr.cmp(s, num_cmp[i], step.dep_rows),
                     deps,
                 )
-                for z, _seg, nbytes in step.sends:
+                for z, seg, _nbytes in step.sends:
                     m = sim.add(
                         f"msg[{t}]{s}->{host}.g{i}",
                         f"link:{sec_res(t, s)}->{host}",
-                        topology.link_between(s, host).comm_time(nbytes),
+                        pr.com(s, host, num_msg[i], seg.rows),
                         [a],
                     )
                     if i + 1 < n_layers:
@@ -284,7 +381,7 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
                 b = sim.add(
                     f"cmp[{t}]{s}.g{i}.rest",
                     sec_res(t, s),
-                    cmp_time(s, i, step.own_rows - step.dep_rows),
+                    pr.cmp(s, num_cmp[i], step.own_rows - step.dep_rows),
                     [a],
                 )
                 last_chunk[(t, s)] = b
@@ -292,24 +389,24 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
         # send; chunk the rest (gated on the below secondary's rows), send below.
         for t, plan in enumerate(plans):
             for z in plan.zone_slots:
-                step = zone_step(plan, i, z)
+                step = zone_step_of(plan, i, z)
                 gates = zone_in.get((t, i, z), {})
                 a = sim.add(
                     f"cmp[{t}]{z}.g{i}.for_{step.above}",
                     host,
-                    cmp_time(host, i, step.rows_for_above),
+                    pr.cmp(host, num_cmp[i], step.rows_for_above),
                     [last_chunk.get((t, host)), gates.get(step.above)],
                 )
                 s1 = sim.add(
                     f"msg[{t}]{z}->{step.above}.g{i}",
                     f"link:{host}->{sec_res(t, step.above)}",
-                    topology.link_between(host, step.above).comm_time(step.bytes_to_above),
+                    pr.com(host, step.above, num_msg[i], step.rows_for_above),
                     [a],
                 )
                 b = sim.add(
                     f"cmp[{t}]{z}.g{i}.rest",
                     host,
-                    cmp_time(host, i, step.zone_rows - step.rows_for_above),
+                    pr.cmp(host, num_cmp[i], step.zone_rows - step.rows_for_above),
                     # the rest chunk consumes every other boundary message the
                     # zone received (positionally below, plus -- in reduced
                     # plans -- any dropped secondary routing into a tail zone)
@@ -318,7 +415,7 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
                 s2 = sim.add(
                     f"msg[{t}]{z}->{step.below}.g{i}",
                     f"link:{host}->{sec_res(t, step.below)}",
-                    topology.link_between(host, step.below).comm_time(step.bytes_to_below),
+                    pr.com(host, step.below, num_msg[i], step.rows_for_below),
                     [b],
                 )
                 last_chunk[(t, host)] = b
@@ -335,15 +432,331 @@ def _lay_halp_dag(sim, plans: list[HALPPlan], topology: CollabTopology, sec_res)
             m = sim.add(
                 f"final[{t}]{s}->{host}",
                 f"link:{sec_res(t, s)}->{host}",
-                topology.link_between(s, host).comm_time(final_bytes(plan, s)),
+                pr.com(s, host, num_msg[n_layers - 1], plan.parts[-1].out[s].rows),
                 [last_chunk[(t, s)]],
             )
             merged.append(m)
         h = sim.add(
             f"head[{t}]",
             host,
-            topology.platform_of(host).compute_time(net.head_flops),
+            pr.cmp(host, pr.num_head, 1),
             merged + [last_chunk[(t, host)]],
         )
         heads.append(h)
     return heads
+
+
+# --------------------------------------------------------------------------
+# Batched planning engine: DAG templates + layout-parameterised durations.
+# --------------------------------------------------------------------------
+
+def _layout_quantities(layouts: Sequence[PlanLayout]) -> np.ndarray:
+    """Per-job row counts of one candidate, in the exact order
+    :func:`_lay_halp_dag` prices jobs.
+
+    This is the *parameter vector* of the template factorisation: job ``j``'s
+    duration is ``nums[j] * q[j] / rate[j]`` where ``nums``/``rate`` live in
+    the :class:`DagTemplate` (structure, shared across candidates) and ``q``
+    is this walk (candidate-specific, pure integer arithmetic on the layout
+    -- no Segment or HALPPlan objects).  The walk mirrors the builder:
+    init slices, then per layer the secondary block (dep chunk, boundary
+    sends, rest chunk) and the zone block (for-above chunk, send, rest chunk,
+    send below), then the final merges and heads.  Any divergence from the
+    builder is caught bit-exactly by :meth:`DagTemplate.from_layouts`'s
+    build-time self-check."""
+    walks = [lay.walk() for lay in layouts]
+    vals: list[float] = []
+    n_layers = layouts[0].n_layers
+    for _sig, init_rows, _s, _z, _f in walks:
+        vals += init_rows
+    for i in range(n_layers):
+        for _sig, _i, sec_layers, _z, _f in walks:
+            vals += sec_layers[i]
+        for _sig, _i, _s, zone_layers, _f in walks:
+            vals += zone_layers[i]
+    for _sig, _i, _s, _z, final_rows in walks:
+        vals += final_rows
+    return np.array(vals)
+
+
+@dataclass
+class DagTemplate:
+    """The job/message DAG of one structural signature, durations factored out.
+
+    ``sim`` holds the reference structure (job list, resources, dependencies)
+    laid once by :func:`_lay_halp_dag`; ``nums``/``den_ids``/``den_kinds``
+    factor every job's duration into ``num * rows / rate`` where ``num`` is a
+    per-layer lane (FLOPs per output row for compute jobs, bits per boundary
+    row for messages -- see :class:`_FloatPricer`), ``rows`` comes from a
+    candidate's :func:`_layout_quantities` vector, and ``rate`` resolves
+    against a topology at evaluation time (so one template serves every
+    rate-drifted rebuild of the same cluster).  Scoring B candidates is then
+    one :meth:`~repro.core.simulator.Sim.run_batch` sweep -- bit-identical
+    to B scalar builds + runs, enforced at build time by a self-check."""
+
+    sim: object  # repro.core.simulator.Sim
+    heads: tuple[int, ...]
+    nums: np.ndarray  # [J] duration-lane numerators
+    den_ids: np.ndarray  # [J] index into den_kinds
+    den_kinds: tuple[tuple, ...]  # ("es", name) | ("link", src, dst)
+
+    @classmethod
+    def from_layouts(
+        cls,
+        layouts: Sequence[PlanLayout],
+        topology: CollabTopology,
+        physical: bool,
+    ) -> "DagTemplate":
+        """Lay the DAG for ``layouts`` (one per task) and record the duration
+        factorisation.  ``physical=False`` clones secondary resources per task
+        (:func:`build_halp_dag`); ``physical=True`` keys them by ES name so
+        tasks contend (:func:`build_multitask_dag`).  Raises AssertionError if
+        the layout quantity walk does not reproduce the scalar builder's
+        durations bit-for-bit."""
+        from .simulator import Sim  # runtime import: simulator imports events
+
+        plans = [plan_from_layout(lay) for lay in layouts]
+        sim = Sim()
+        pricer = _RecordingPricer(plans[0].net, topology)
+        sec_res = (lambda t, s: s) if physical else (lambda t, s: f"{s}^{t}")
+        heads = _lay_halp_dag(sim, plans, topology, sec_res, pricer=pricer)
+        tmpl = cls(
+            sim=sim,
+            heads=tuple(heads),
+            nums=np.array(pricer.nums),
+            den_ids=np.array(pricer.den_ids),
+            den_kinds=tuple(pricer.den_kinds),
+        )
+        quantities = _layout_quantities(layouts)
+        if len(quantities) != len(sim.jobs):
+            raise AssertionError(
+                f"layout quantity walk produced {len(quantities)} entries for "
+                f"{len(sim.jobs)} builder jobs -- the walks fell out of step"
+            )
+        ref = tmpl.durations(quantities, topology)[0]
+        got = np.array([job.duration for job in sim.jobs])
+        if not np.array_equal(ref, got):
+            bad = int(np.flatnonzero(ref != got)[0])
+            raise AssertionError(
+                f"template durations diverge from the scalar builder at job "
+                f"{bad} ({sim.jobs[bad].name}): {ref[bad]} != {got[bad]}"
+            )
+        return tmpl
+
+    def rates(self, topology: CollabTopology) -> np.ndarray:
+        """Per-den-kind rates (eff FLOP/s or link bps) under ``topology``."""
+        return np.array(
+            [
+                topology.platform_of(kind[1]).eff_flops
+                if kind[0] == "es"
+                else topology.link_between(kind[1], kind[2]).rate_bps
+                for kind in self.den_kinds
+            ]
+        )
+
+    def durations(self, quantities: np.ndarray, topology: CollabTopology) -> np.ndarray:
+        """[B, J] durations for B quantity vectors under ``topology``'s rates."""
+        q = np.asarray(quantities, dtype=np.float64)
+        if q.ndim == 1:
+            q = q[None, :]
+        return (self.nums * q) / self.rates(topology)[self.den_ids]
+
+    def run(self, quantities: np.ndarray, topology: CollabTopology):
+        """Score B candidates in one vectorized DES sweep (BatchRun)."""
+        return self.sim.run_batch(self.durations(quantities, topology))
+
+
+# Process-wide template cache: keyed on structure only (net, host, task
+# structure, structural signature) -- never on rates, which resolve per call,
+# so channel-drifting replans keep hitting the same templates.
+_TEMPLATES: OrderedDict[tuple, DagTemplate] = OrderedDict()
+_TEMPLATE_CAPACITY = 128
+
+
+def _template_for(key: tuple, build) -> DagTemplate:
+    tmpl = _TEMPLATES.get(key)
+    if tmpl is None:
+        tmpl = build()
+        _TEMPLATES[key] = tmpl
+        if len(_TEMPLATES) > _TEMPLATE_CAPACITY:
+            _TEMPLATES.popitem(last=False)
+    else:
+        _TEMPLATES.move_to_end(key)
+    return tmpl
+
+
+# Process-wide layout cache.  A plan layout depends on (net, secondaries,
+# host, overlap, ratios) but NOT on platform/link rates, so an online
+# controller re-optimising the same cluster against drifting rate estimates
+# revisits the same layouts over and over -- the dominant cost of a warm
+# batched evaluation.  False stores infeasibility (also worth remembering).
+_LAYOUTS: OrderedDict[tuple, "PlanLayout | bool"] = OrderedDict()
+_LAYOUT_CAPACITY = 8192
+
+
+def _layout_cached(
+    net: ConvNetGeom,
+    secondaries: tuple[str, ...],
+    host: str,
+    overlap_rows: int,
+    ratios: tuple[float, ...],
+    auto_reduce: bool = True,
+) -> PlanLayout | None:
+    key = (net, secondaries, host, overlap_rows, ratios, auto_reduce)
+    hit = _LAYOUTS.get(key)
+    if hit is None:
+        try:
+            hit = plan_layout(
+                net,
+                secondaries,
+                host=host,
+                overlap_rows=overlap_rows,
+                ratios=ratios,
+                auto_reduce=auto_reduce,
+            )
+        except (AssertionError, ValueError):
+            hit = False
+        _LAYOUTS[key] = hit
+        if len(_LAYOUTS) > _LAYOUT_CAPACITY:
+            _LAYOUTS.popitem(last=False)
+    else:
+        _LAYOUTS.move_to_end(key)
+    return hit or None
+
+
+class HalpBatchEvaluator:
+    """Batched (ratios, overlap) candidate pricing for one cluster.
+
+    The tentpole fast path of the planner: per candidate only the integer
+    :class:`~repro.core.partition.PlanLayout` and its row-count vector are
+    computed; the DAG structure is laid once per structural signature
+    (:class:`DagTemplate`, cached process-wide) and all candidates sharing a
+    signature are priced in one vectorized :meth:`Sim.run_batch` sweep.
+    Scores are bit-identical to :func:`~repro.core.optimizer.evaluate_plan`'s
+    scalar plan-build + DES path (pinned in ``tests/test_conformance.py``)."""
+
+    def __init__(
+        self,
+        net: ConvNetGeom,
+        topology: CollabTopology,
+        n_tasks: int = 1,
+        auto_reduce: bool = True,
+    ):
+        self.net = net
+        self.topology = topology
+        self.n_tasks = n_tasks
+        self.auto_reduce = auto_reduce
+
+    def layout_for(self, ratios, overlap_rows: int) -> PlanLayout | None:
+        """The candidate's layout (process-wide cache), or None if infeasible."""
+        return _layout_cached(
+            self.net,
+            self.topology.secondaries,
+            self.topology.host,
+            overlap_rows,
+            tuple(ratios),
+            self.auto_reduce,
+        )
+
+    def evaluate(self, candidates: Sequence[tuple]) -> list[float]:
+        """DES makespans for ``(ratios, overlap_rows)`` candidates (+inf when
+        infeasible), batched by structural signature."""
+        scores = [float("inf")] * len(candidates)
+        by_sig: dict[tuple, list[tuple[int, PlanLayout]]] = {}
+        for k, (ratios, w) in enumerate(candidates):
+            lay = self.layout_for(ratios, w)
+            if lay is not None:
+                by_sig.setdefault(lay.signature, []).append((k, lay))
+        for sig, members in by_sig.items():
+            key = ("clone", self.net, self.topology.host, self.n_tasks, sig)
+            first = members[0][1]
+            tmpl = _template_for(
+                key,
+                lambda lay=first: DagTemplate.from_layouts(
+                    [lay] * self.n_tasks, self.topology, physical=False
+                ),
+            )
+            q = np.stack(
+                [_layout_quantities([lay] * self.n_tasks) for _k, lay in members]
+            )
+            run = tmpl.run(q, self.topology)
+            for row, (k, _lay) in enumerate(members):
+                scores[k] = float(run.makespan[row])
+        return scores
+
+
+class MultitaskBatchEvaluator:
+    """Batched scoring of task -> secondaries assignments on one physical pool.
+
+    Candidates are tuples of per-task secondary groups; each group gets the
+    capacity-ratio plan layout over its sub-topology (the cheap scoring mode
+    of :func:`~repro.core.placement.place_tasks`) and the whole assignment is
+    priced on the shared-contention DAG (:func:`build_multitask_dag`
+    semantics: host/links are physical resources) -- templated and batched
+    exactly like the single-cluster evaluator."""
+
+    def __init__(self, net: ConvNetGeom, pool: CollabTopology, overlap_rows: int = 4):
+        self.net = net
+        self.pool = pool
+        self.overlap_rows = overlap_rows
+
+    def layouts_for(self, groups: Sequence[Sequence[str]]) -> list[PlanLayout] | None:
+        """Per-task layouts for one assignment, or None when any group is
+        infeasible."""
+        layouts = []
+        for group in groups:
+            try:
+                sub = self.pool.sub_topology(group)
+            except ValueError:
+                return None
+            lay = _layout_cached(
+                self.net,
+                sub.secondaries,
+                self.pool.host,
+                self.overlap_rows,
+                sub.capacity_ratios(),
+            )
+            if lay is None:
+                return None
+            layouts.append(lay)
+        return layouts
+
+    def evaluate(self, candidates: Sequence[tuple]) -> list[dict | None]:
+        """Shared-pool DES scores per assignment candidate: dicts with
+        ``total`` / ``avg_delay`` / ``per_task_finish`` (None = infeasible),
+        bit-identical to ``placement.simulate_placement``."""
+        return self.evaluate_layout_sets(
+            [self.layouts_for(groups) for groups in candidates]
+        )
+
+    def evaluate_layout_sets(
+        self, candidates: Sequence[list[PlanLayout] | None]
+    ) -> list[dict | None]:
+        """Score prepared per-task layout lists (None entries stay None) --
+        the entry point for plan sets whose knobs differ from the capacity
+        default, e.g. a placement's per-task refined (ratios, overlap)."""
+        results: list[dict | None] = [None] * len(candidates)
+        by_sig: dict[tuple, list[tuple[int, list[PlanLayout]]]] = {}
+        for k, layouts in enumerate(candidates):
+            if layouts is not None:
+                sig = tuple(lay.signature for lay in layouts)
+                by_sig.setdefault(sig, []).append((k, layouts))
+        for sig, members in by_sig.items():
+            key = ("multi", self.net, self.pool.host, sig)
+            first = members[0][1]
+            tmpl = _template_for(
+                key,
+                lambda lays=first: DagTemplate.from_layouts(
+                    lays, self.pool, physical=True
+                ),
+            )
+            q = np.stack([_layout_quantities(lays) for _k, lays in members])
+            run = tmpl.run(q, self.pool)
+            for row, (k, _lays) in enumerate(members):
+                finishes = [float(run.finish_of(h)[row]) for h in tmpl.heads]
+                results[k] = dict(
+                    total=float(run.makespan[row]),
+                    avg_delay=sum(finishes) / len(finishes),
+                    per_task_finish=tuple(finishes),
+                )
+        return results

@@ -34,11 +34,18 @@ class ConvNetGeom:
 
     def sizes(self) -> list[int]:
         """Spatial size before each layer; sizes()[i] is the input rows of layer i,
-        and sizes()[-1] the final feature rows."""
-        out = [self.in_rows]
-        for g in self.layers:
-            out.append(out_size(out[-1], g.k, g.s, g.p))
-        return out
+        and sizes()[-1] the final feature rows.  Memoised per *instance* (the
+        planner's inner loops call this thousands of times, and hashing the
+        geometry would cost more than the loop); the returned list is a fresh
+        copy, so callers may mutate it freely."""
+        cached = self.__dict__.get("_sizes")
+        if cached is None:
+            out = [self.in_rows]
+            for g in self.layers:
+                out.append(out_size(out[-1], g.k, g.s, g.p))
+            cached = tuple(out)
+            object.__setattr__(self, "_sizes", cached)
+        return list(cached)
 
     def layer_flops(self, i: int, rows: int | None = None) -> float:
         """FLOPs of layer i restricted to ``rows`` output rows (None = all)."""

@@ -11,11 +11,20 @@ truth the paper's recursion approximates):
   overlap-zone width in output rows,
 * objective: the simulated makespan of ``n_tasks`` concurrent tasks on the
   given :class:`~repro.core.topology.CollabTopology`,
-* method: cyclic coordinate descent on the ratio simplex (move mass onto one
-  secondary at a time, renormalise) interleaved with an exhaustive scan of the
-  overlap choices, with step-size halving -- the objective is piecewise
-  constant in the ratios (segments are integer rows), so gradient-free moves
-  with a shrinking step are the right tool.
+* method: steepest coordinate descent on the ratio simplex (move mass onto one
+  secondary at a time, renormalise) joined with the overlap choices, with
+  step-size halving -- the objective is piecewise constant in the ratios
+  (segments are integer rows), so gradient-free moves with a shrinking step
+  are the right tool.  Each round's whole perturbation neighbourhood
+  (2N ratio moves + |W|-1 overlap switches) is priced as **one batched DES
+  call** (:class:`~repro.core.events.HalpBatchEvaluator`: plan layouts +
+  cached DAG templates + ``Sim.run_batch``), with a ``(ratios, overlap)``
+  memo so renormalisation collisions and revisited operating points are never
+  re-priced.  ``engine="scalar"`` keeps the one-candidate-at-a-time pricing
+  path (plan build + DAG build + scalar DES per candidate) callable: the two
+  engines share the search loop and their scores are bit-identical, so they
+  return the same plan -- the scalar engine exists as the baseline that
+  ``benchmarks/planner_speed.py`` measures the batched engine against.
 
 Infeasible candidates (a plan whose messages would skip a slot, or more slots
 than rows) are rejected by the partitioner's invariant checks and priced +inf.
@@ -26,6 +35,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from .events import HalpBatchEvaluator
 from .nets import ConvNetGeom
 from .partition import HALPPlan, plan_halp_topology
 from .simulator import simulate_halp
@@ -84,19 +94,48 @@ def optimize_plan(
     max_rounds: int = 12,
     objective: Callable[[tuple[float, ...], int], float] | None = None,
     auto_reduce: bool = True,
+    engine: str = "batched",
+    eval_budget: int | None = None,
+    tol: float = 0.0,
 ) -> OptimizeResult:
-    """Coordinate-descent search for the fastest (ratios, overlap) pair.
+    """Steepest coordinate-descent search for the fastest (ratios, overlap).
 
-    Starts from the topology's capacity-weighted ratios (or ``init_ratios``),
-    then alternates (a) an exhaustive scan of ``overlap_choices`` and (b) one
-    cyclic pass moving ratio mass onto/off each secondary, halving the step
-    whenever a full round fails to improve.  Terminates when the step falls
-    below ``min_step`` or after ``max_rounds``.
+    Starts from the topology's capacity-weighted ratios (or ``init_ratios``)
+    and the best of ``overlap_choices`` there, then per round prices the whole
+    perturbation neighbourhood -- mass on/off each secondary at the current
+    ``step`` plus every other overlap width -- and moves to the best strictly
+    improving candidate, halving the step when none improves.  Terminates when
+    the step falls below ``min_step``, after ``max_rounds`` rounds, when a
+    round's improvement falls below ``tol`` (early exit -- lets controllers
+    trade tail latency for plan quality), or when ``eval_budget`` priced
+    evaluations have been spent (the hard cap on worst-case replan latency;
+    ``max_rounds``/``min_step`` alone only bound the round *count*).
+
+    ``engine="batched"`` (default) prices each neighbourhood as one
+    :class:`~repro.core.events.HalpBatchEvaluator` sweep and memoises scores
+    by ``(ratios, overlap)`` so duplicate renormalised candidates are never
+    re-priced; ``engine="scalar"`` prices candidates one at a time through
+    :func:`evaluate_plan` (the pre-template path, kept callable as the
+    benchmark baseline).  Both engines share this search loop and produce
+    bit-identical scores, hence identical plans -- including under an
+    ``eval_budget``, where the batched engine prices lazily (no speculative
+    prefetch) so the budget cuts at the same candidate on both engines.
 
     ``objective`` may replace the default simulated-makespan objective (e.g.
-    to optimise the closed form instead, or average delay for multi-task)."""
+    to optimise the closed form instead, or average delay for multi-task);
+    the batched DES fast path then does not apply, but the memo still does."""
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"engine must be 'batched' or 'scalar', got {engine!r}")
+    if eval_budget is not None and eval_budget < 1:
+        raise ValueError(f"eval_budget must be >= 1, got {eval_budget}")
     evals = 0
     history: list[tuple[tuple[float, ...], int, float]] = []
+    batched = engine == "batched"
+    evaluator = (
+        HalpBatchEvaluator(net, topology, n_tasks=n_tasks, auto_reduce=auto_reduce)
+        if batched and objective is None
+        else None
+    )
 
     def default_objective(ratios: tuple[float, ...], w: int) -> float:
         return evaluate_plan(
@@ -104,13 +143,40 @@ def optimize_plan(
         )
 
     fn = objective or default_objective
+    # Scores memo: the batched engine always consults it; the scalar engine
+    # normally keeps the historical price-every-candidate behaviour (the cost
+    # profile the benchmark compares against) -- scores are bit-identical
+    # either way, so the unbudgeted trajectory cannot differ.  Under an
+    # eval_budget BOTH engines memoise: re-priced duplicates would otherwise
+    # consume the scalar engine's budget at different candidates than the
+    # batched engine's, and the budget cut-off must land identically for the
+    # engines to return the same plan.
+    use_memo = batched or eval_budget is not None
+    memo: dict[tuple[tuple[float, ...], int], float] = {}
 
-    def priced(ratios: tuple[float, ...], w: int) -> float:
+    def price_all(cands: list[tuple[tuple[float, ...], int]]) -> list[float]:
         nonlocal evals
-        evals += 1
-        v = fn(ratios, w)
-        history.append((ratios, w, v))
-        return v
+        out: list[float | None] = [None] * len(cands)
+        if use_memo:
+            for k, c in enumerate(cands):
+                if c in memo:
+                    out[k] = memo[c]
+        fresh = [(k, c) for k, c in enumerate(cands) if out[k] is None]
+        if eval_budget is not None:
+            fresh = fresh[: max(0, eval_budget - evals)]
+        if fresh:
+            if evaluator is not None:
+                scores = evaluator.evaluate([c for _, c in fresh])
+            else:
+                scores = [fn(r, w) for _, (r, w) in fresh]
+            evals += len(fresh)
+            for (k, c), v in zip(fresh, scores):
+                memo[c] = v
+                out[k] = v
+                history.append((c[0], c[1], v))
+        # candidates beyond an exhausted budget stay unpriced: +inf keeps them
+        # unselectable without spending evaluations on them
+        return [v if v is not None else float("inf") for v in out]
 
     def renorm(raw: Sequence[float]) -> tuple[float, ...]:
         clipped = [max(min_ratio, r) for r in raw]
@@ -119,35 +185,74 @@ def optimize_plan(
 
     ratios = renorm(init_ratios or topology.capacity_ratios())
     n = len(ratios)
-    best_w = overlap_choices[0]
+    scan = [(ratios, w) for w in overlap_choices]
+    scores = price_all(scan)
     best = float("inf")
-    for w in overlap_choices:
-        v = priced(ratios, w)
+    best_w = overlap_choices[0]
+    for (_, w), v in zip(scan, scores):
         if v < best:
             best, best_w = v, w
 
+    moves = [(j, sign) for j in range(n) for sign in (1.0, -1.0)]
+    # Speculative neighbourhood prefetch spends evaluations on candidates the
+    # acceptance scan may never reach (a mid-scan accept shifts the base), so
+    # under an eval_budget it would cut the budget at *different* candidates
+    # than the scalar engine's lazy acceptance-order pricing -- breaking the
+    # identical-plans guarantee the replan cache keying relies on.  Budgeted
+    # searches therefore price lazily on both engines (the batched evaluator
+    # and the memo still apply, per candidate).
+    speculate = evaluator is not None and eval_budget is None
+
+    def perturbed(base: tuple[float, ...], j: int, sign: float) -> tuple[float, ...]:
+        raw = list(base)
+        raw[j] = max(min_ratio, raw[j] + sign * step)
+        return renorm(raw)
+
     rounds = 0
-    while step >= min_step and rounds < max_rounds:
+    converged = False
+    while step >= min_step and rounds < max_rounds and not converged:
+        if eval_budget is not None and evals >= eval_budget:
+            break
         rounds += 1
         improved = False
-        for j in range(n):
-            for sign in (1.0, -1.0):
-                raw = list(ratios)
-                raw[j] = max(min_ratio, raw[j] + sign * step)
-                cand = renorm(raw)
-                if cand == ratios:
-                    continue
-                v = priced(cand, best_w)
-                if v < best:
-                    best, ratios, improved = v, cand, True
+        round_start = best
+        # The acceptance order is the classic cyclic pass (identical plans to
+        # the sequential optimizer); batching happens *speculatively*: the
+        # whole remaining neighbourhood of the current base is priced in one
+        # sweep, so the sequential scan below is all memo hits until an
+        # accepted move shifts the base -- at which point the remainder is
+        # re-batched from the new base.
+        if speculate:
+            price_all(
+                [(c, best_w) for jj, ss in moves if (c := perturbed(ratios, jj, ss)) != ratios]
+            )
+        for idx, (j, sign) in enumerate(moves):
+            cand = perturbed(ratios, j, sign)
+            if cand == ratios:
+                continue
+            v = price_all([(cand, best_w)])[0]
+            if v < best:
+                best, ratios, improved = v, cand, True
+                if speculate:
+                    price_all(
+                        [
+                            (c, best_w)
+                            for jj, ss in moves[idx + 1 :]
+                            if (c := perturbed(ratios, jj, ss)) != ratios
+                        ]
+                    )
+        if speculate:
+            price_all([(ratios, w) for w in overlap_choices if w != best_w])
         for w in overlap_choices:
             if w == best_w:
                 continue
-            v = priced(ratios, w)
+            v = price_all([(ratios, w)])[0]
             if v < best:
                 best, best_w, improved = v, w, True
         if not improved:
             step *= 0.5
+        elif math.isfinite(best) and round_start - best < tol:
+            converged = True  # tol early-exit: bound the controller's tail
     if not math.isfinite(best):
         raise ValueError(
             f"no feasible HALP plan for {topology.n_secondaries} secondaries on "

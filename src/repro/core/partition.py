@@ -24,7 +24,8 @@ engine (``repro.spatial``) and the MoDNN baseline.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Sequence, TYPE_CHECKING
 
 from .nets import ConvNetGeom, DTYPE_BYTES
@@ -38,10 +39,13 @@ __all__ = [
     "LayerPartition",
     "HALPPlan",
     "PlanInfeasible",
+    "PlanLayout",
     "split_rows",
     "plan_halp",
     "plan_halp_n",
     "plan_halp_topology",
+    "plan_layout",
+    "plan_from_layout",
     "plan_even",
 ]
 
@@ -80,6 +84,54 @@ class Segment:
 
 
 EMPTY = Segment(1, 0)
+
+# Interval twin of EMPTY for the layout layer (plain tuples, no dataclass).
+EMPTY_IV = (1, 0)
+
+
+def _message_iv(
+    need: tuple[int, int], own: tuple[int, int], got: tuple[int, int]
+) -> tuple[int, int]:
+    """The message algebra shared by :meth:`HALPPlan.message` and
+    :class:`PlanLayout`: rows of ``own`` that ``need`` covers and ``got``
+    does not already hold.  Intervals are 1-indexed inclusive, empty iff
+    lo > hi.  One definition serves both views so the batched planning
+    engine cannot drift from the materialised plan."""
+    lo = max(need[0], own[0])
+    hi = min(need[1], own[1])
+    if lo > hi:
+        return EMPTY_IV
+    pieces = []
+    if lo < got[0]:
+        pieces.append((lo, min(hi, got[0] - 1)))
+    if hi > got[1]:
+        pieces.append((max(lo, got[1] + 1), hi))
+    if not pieces:
+        return EMPTY_IV
+    if len(pieces) == 1:
+        return pieces[0]
+    # src on both sides of dst cannot happen with contiguous ordered segments
+    raise AssertionError("non-contiguous message; segment ordering violated")
+
+
+# Cross-candidate cache of per-layer walk quantities (see PlanLayout.walk):
+# a layer's priced rows are a pure function of (its slot boundaries, the next
+# layer's input needs), and coordinate-descent candidates share most layers.
+_WALK_LAYER_CACHE: dict[tuple, tuple] = {}
+
+
+def _union_iv_rows(ivs: list[tuple[int, int]]) -> int:
+    """Distinct rows covered by possibly-overlapping intervals (a 1-row middle
+    secondary can owe the *same* row to two adjacent zones; it computes it
+    once)."""
+    rows = 0
+    cur_hi = 0
+    for lo, hi in sorted(iv for iv in ivs if iv[0] <= iv[1]):
+        lo = max(lo, cur_hi + 1)
+        if hi >= lo:
+            rows += hi - lo + 1
+            cur_hi = hi
+    return rows
 
 
 @dataclass(frozen=True)
@@ -144,24 +196,13 @@ class HALPPlan:
             if dst == self.host and self.owner_of(src) != self.host:
                 return self.parts[layer].out[src]
             return EMPTY
+        if src == dst:
+            return EMPTY
         need = self.parts[layer + 1].inp[dst]
         own = self.parts[layer].out[src]
         got = self.parts[layer].out[dst]
-        inter = need.intersect(own)
-        if not inter or src == dst:
-            return EMPTY
-        # dst already owns `got`; only rows outside it must travel.
-        pieces = []
-        if inter.lo < got.lo:
-            pieces.append(Segment(inter.lo, min(inter.hi, got.lo - 1)))
-        if inter.hi > got.hi:
-            pieces.append(Segment(max(inter.lo, got.hi + 1), inter.hi))
-        if not pieces:
-            return EMPTY
-        if len(pieces) == 1:
-            return pieces[0]
-        # src on both sides of dst cannot happen with contiguous ordered segments
-        raise AssertionError("non-contiguous message; segment ordering violated")
+        lo, hi = _message_iv((need.lo, need.hi), (own.lo, own.hi), (got.lo, got.hi))
+        return Segment(lo, hi) if lo <= hi else EMPTY
 
     def message_bytes(self, layer: int, src: str, dst: str) -> float:
         seg = self.message(layer, src, dst)
@@ -172,13 +213,9 @@ class HALPPlan:
         return DTYPE_BYTES * seg.rows * width * g.c_out
 
 
-def split_rows(total: int, ratios: Sequence[float]) -> list[Segment]:
-    """Paper eqs. (6)-(7) generalised: contiguous segments by cumulative ratio.
-
-    Segments exactly cover 1..total; rounding via the cumulative boundary keeps
-    every segment within +-1 row of its exact ratio share.  Heavily skewed
-    ratios on small totals may produce *empty* segments (lo > hi) -- callers
-    that need a minimum occupancy must redistribute (see ``plan_halp_n``)."""
+def _split_counts(total: int, ratios: Sequence[float]) -> list[int]:
+    """Row counts of :func:`split_rows`'s segments (the partitioner's inner
+    loop only needs counts, not Segment objects)."""
     if total < 0:
         raise ValueError(f"total must be >= 0, got {total}")
     if abs(sum(ratios) - 1.0) > 1e-9:
@@ -189,7 +226,23 @@ def split_rows(total: int, ratios: Sequence[float]) -> list[Segment]:
         acc += r
         bounds.append(min(total, max(bounds[-1], int(round(acc * total)))))
     bounds.append(total)
-    return [Segment(lo + 1, hi) for lo, hi in zip(bounds[:-1], bounds[1:])]
+    return [hi - lo for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+
+def split_rows(total: int, ratios: Sequence[float]) -> list[Segment]:
+    """Paper eqs. (6)-(7) generalised: contiguous segments by cumulative ratio.
+
+    Segments exactly cover 1..total; rounding via the cumulative boundary keeps
+    every segment within +-1 row of its exact ratio share.  Heavily skewed
+    ratios on small totals may produce *empty* segments (lo > hi) -- callers
+    that need a minimum occupancy must redistribute (see ``plan_halp_n``)."""
+    counts = _split_counts(total, ratios)
+    segs = []
+    lo = 0
+    for c in counts:
+        segs.append(Segment(lo + 1, lo + c))
+        lo += c
+    return segs
 
 
 def _align_down(x: int, align: int) -> int:
@@ -242,7 +295,7 @@ def _conv_slot_rows(
         raise ValueError(
             f"cannot fit {n_sec} secondaries + {k_zones} zones into {o} rows"
         )
-    sec_u = _min_one_unit([s.rows for s in split_rows(body_u, ratios)], body_u)
+    sec_u = _min_one_unit(_split_counts(body_u, ratios), body_u)
     counts = []
     for j in range(n_sec):
         counts.append(sec_u[j] * align)
@@ -286,7 +339,7 @@ def _reduced_slot_rows(
         )
     shares = [*ratios[:n_active], sum(ratios[n_active:])]
     total = sum(shares)
-    counts_u = [s.rows for s in split_rows(body_u, [r / total for r in shares])]
+    counts_u = _split_counts(body_u, [r / total for r in shares])
     # every active secondary and the tail need at least one unit each
     while min(counts_u) < 1:
         counts_u[counts_u.index(max(counts_u))] -= 1
@@ -357,6 +410,236 @@ def plan_halp_n(
     partitioner raise, with the remediation in the message.  With
     ``auto_reduce=False`` any violation raises immediately (the pre-reduction
     behaviour, kept for strict-isolation callers and error-path tests)."""
+    return plan_from_layout(
+        plan_layout(
+            net,
+            secondaries,
+            host=host,
+            overlap_rows=overlap_rows,
+            ratios=ratios,
+            auto_reduce=auto_reduce,
+        )
+    )
+
+
+def _reduce_caps(caps: list[int], exc: PlanInfeasible, conv_anchor: list[int]) -> bool:
+    """Shrink the active-secondary cap at the first reducible layer the
+    violation names; False when every candidate is already at one secondary
+    (the 'even N=1 fails' terminal case)."""
+    for j in exc.reduce_at:
+        if not 0 <= j < len(caps):
+            continue
+        j = conv_anchor[j]
+        eff = min(caps[: j + 1])
+        if eff > 1:
+            caps[j] = eff - 1
+            return True
+    return False
+
+
+@lru_cache(maxsize=256)
+def _net_aligns(net: ConvNetGeom) -> tuple[int, ...]:
+    """Per-layer zone alignment, hoisted once per geometry (pools inherit the
+    previous layer's boundaries, so their entry is unused)."""
+    sizes = net.sizes()
+    return tuple(
+        _pool_alignment(net, i, sizes[i + 1]) if g.kind != "pool" else 1
+        for i, g in enumerate(net.layers)
+    )
+
+
+def _slot_names(secondaries: tuple[str, ...], host: str) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """Slot names in row order (sec, zone, sec, ...) and their physical owners."""
+    n_sec = len(secondaries)
+    k_zones = n_sec - 1
+    zone_names = (
+        (host,) if k_zones == 1 else tuple(f"{host}#{j}" for j in range(k_zones))
+    )
+    slots: list[str] = []
+    owners: list[str] = []
+    for j, s in enumerate(secondaries):
+        slots.append(s)
+        owners.append(s)
+        if j < k_zones:
+            slots.append(zone_names[j])
+            owners.append(host)
+    return tuple(slots), tuple(owners)
+
+
+@dataclass
+class PlanLayout:
+    """Integer skeleton of a HALP plan: slot boundaries + input ranges per layer.
+
+    This is the partitioner's result *before* Segment materialisation.  Every
+    quantity the latency engines price -- row counts, dependent boundary rows,
+    message rows -- derives from it with plain integer arithmetic, so the
+    batched planning engine (:class:`repro.core.events.DagTemplate`) can score
+    candidate ``(ratios, overlap)`` pairs without building :class:`HALPPlan`
+    objects.  :func:`plan_halp_n` materialises this same layout into the full
+    plan (:func:`plan_from_layout`), so the two views cannot diverge.
+
+    Slot ``p`` of layer ``i`` owns output rows ``bounds[i][p]+1 ..
+    bounds[i][p+1]``; even positions are secondary segments, odd positions are
+    host zones.  ``signature`` fingerprints the *structure* of the job/message
+    DAG the layout induces (which sends exist per secondary per layer) -- two
+    layouts with equal signatures differ only in job durations."""
+
+    net: ConvNetGeom
+    host: str
+    secondaries: tuple[str, ...]
+    overlap_rows: int
+    ratios: tuple[float, ...]
+    bounds: tuple[tuple[int, ...], ...]
+    inp: tuple[tuple[tuple[int, int], ...], ...]
+    slots: tuple[str, ...] = field(init=False)
+    owners: tuple[str, ...] = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.slots, self.owners = _slot_names(self.secondaries, self.host)
+        self.n_slots = len(self.slots)
+        self.n_layers = len(self.bounds)
+        self.sec_pos = tuple(range(0, self.n_slots, 2))
+        self.zone_pos = tuple(range(1, self.n_slots, 2))
+        self._walked: tuple | None = None
+
+    def out_iv(self, i: int, p: int) -> tuple[int, int]:
+        b = self.bounds[i]
+        return (b[p] + 1, b[p + 1])
+
+    def message_iv(self, i: int, src_p: int, dst_p: int) -> tuple[int, int]:
+        """Interval twin of :meth:`HALPPlan.message` between two *slots*.
+
+        At the last layer slot-to-slot messages are empty (the only last-layer
+        traffic is the secondaries' final merge into the host, which is not a
+        slot -- see :meth:`final` semantics in ``HALPPlan.message``)."""
+        if src_p == dst_p or i + 1 >= self.n_layers:
+            return EMPTY_IV
+        return _message_iv(
+            self.inp[i + 1][dst_p], self.out_iv(i, src_p), self.out_iv(i, dst_p)
+        )
+
+    def walk(self) -> tuple:
+        """One fused pass over the layout producing everything the batched
+        DES evaluator needs, cached: ``(signature, init_rows, sec_rows_per_
+        layer, zone_rows_per_layer, final_rows)``.
+
+        The row lists follow the exact job order of the DAG builder's per-task
+        blocks (``events._layout_quantities`` stitches them into the template
+        parameter vector); the logic is the interval twin of
+        ``events.sec_step`` / ``events.zone_step``, inlined for speed -- any
+        divergence from those reference step functions is caught bit-exactly
+        by the template build self-check."""
+        if self._walked is not None:
+            return self._walked
+        bounds, inp = self.bounds, self.inp
+        n_layers, n_slots = self.n_layers, self.n_slots
+        sec_pos, zone_pos = self.sec_pos, self.zone_pos
+        init_rows = tuple(
+            max(0, inp[0][p][1] - inp[0][p][0] + 1) for p in sec_pos
+        )
+        sec_layers: list[tuple] = []
+        zone_layers: list[tuple] = []
+        sig_rows: list[tuple] = []
+        if len(_WALK_LAYER_CACHE) > 8192:  # unbounded candidate streams
+            _WALK_LAYER_CACHE.clear()
+        for i in range(n_layers):
+            b = bounds[i]
+            last = i + 1 >= n_layers
+            ninp = None if last else inp[i + 1]
+            # layer quantities are a pure function of this layer's boundaries
+            # and the next layer's input needs; candidates overlap heavily
+            # (coordinate descent moves a few boundary rows per step), so the
+            # cache short-circuits most layers of most candidates
+            ckey = (b, ninp)
+            cached = _WALK_LAYER_CACHE.get(ckey)
+            if cached is not None:
+                svals, zvals, sig_row = cached
+                sec_layers.append(svals)
+                zone_layers.append(zvals)
+                sig_rows.append(sig_row)
+                continue
+            svals: list[float] = []
+            sig_row: list[tuple] = []
+            for p in sec_pos:
+                own_lo, own_hi = b[p] + 1, b[p + 1]
+                own = own_hi - own_lo + 1
+                if last:
+                    targets = ()
+                    if own > 0 and n_slots > 1:
+                        targets = ((p - 1 if p else p + 1, (own_lo, own_hi)),)
+                    dep = own
+                else:
+                    adjacent = []
+                    extra = []
+                    for z in zone_pos:
+                        # inline message_iv(i, p, z)
+                        need = ninp[z]
+                        lo = max(need[0], own_lo)
+                        hi = min(need[1], own_hi)
+                        if lo > hi:
+                            iv = EMPTY_IV
+                        else:
+                            got_lo, got_hi = b[z] + 1, b[z + 1]
+                            p1, p2 = lo < got_lo, hi > got_hi
+                            if p1 and p2:
+                                raise AssertionError(
+                                    "non-contiguous message; segment ordering violated"
+                                )
+                            if p1:
+                                iv = (lo, min(hi, got_lo - 1))
+                            elif p2:
+                                iv = (max(lo, got_hi + 1), hi)
+                            else:
+                                iv = EMPTY_IV
+                        if z == p - 1 or z == p + 1:
+                            adjacent.append((z, iv))
+                        elif iv != EMPTY_IV:
+                            extra.append((z, iv))
+                    targets = tuple(adjacent + extra)
+                    dep = min(own, _union_iv_rows([iv for _, iv in targets]))
+                svals.append(dep)
+                for _z, iv in targets:
+                    svals.append(max(0, iv[1] - iv[0] + 1))
+                svals.append(own - dep)
+                sig_row.append(tuple(z for z, _ in targets))
+            zvals: list[float] = []
+            for z in zone_pos:
+                if last:
+                    above = below = 0
+                else:
+                    zone_iv = (b[z] + 1, b[z + 1])
+                    iva = _message_iv(ninp[z - 1], zone_iv, (b[z - 1] + 1, b[z]))
+                    above = iva[1] - iva[0] + 1 if iva[0] <= iva[1] else 0
+                    ivb = _message_iv(ninp[z + 1], zone_iv, (b[z + 1] + 1, b[z + 2]))
+                    below = ivb[1] - ivb[0] + 1 if ivb[0] <= ivb[1] else 0
+                zrows = b[z + 1] - b[z]
+                zvals += [above, above, zrows - above, below]
+            entry = (tuple(svals), tuple(zvals), tuple(sig_row))
+            _WALK_LAYER_CACHE[ckey] = entry
+            sec_layers.append(entry[0])
+            zone_layers.append(entry[1])
+            sig_rows.append(entry[2])
+        lb = bounds[-1]
+        final_rows = tuple(lb[p + 1] - lb[p] for p in sec_pos) + (1.0,)
+        signature = (self.secondaries, tuple(sig_rows))
+        self._walked = (signature, init_rows, sec_layers, zone_layers, final_rows)
+        return self._walked
+
+    @property
+    def signature(self) -> tuple:
+        return self.walk()[0]
+
+
+def plan_layout(
+    net: ConvNetGeom,
+    secondaries: Sequence[str],
+    host: str = E0,
+    overlap_rows: int = 4,
+    ratios: Sequence[float] | None = None,
+    auto_reduce: bool = True,
+) -> PlanLayout:
+    """Compute the N-way HALP layout (validation + auto-reduction + invariant
+    check, identical to :func:`plan_halp_n`, which materialises this result)."""
     secondaries = tuple(secondaries)
     n_sec = len(secondaries)
     if n_sec < 2:
@@ -378,35 +661,26 @@ def plan_halp_n(
     for i, g in enumerate(net.layers):
         conv_anchor.append(i if g.kind != "pool" or i == 0 else conv_anchor[i - 1])
     caps = [n_sec] * n_layers
+    # layer memos survive cap iterations: ratios/overlap are fixed here, so a
+    # re-build after a cap reduction recomputes only the layers whose active
+    # count actually changed
+    conv_cache: dict[tuple, tuple[int, ...]] = {}
+    inp_cache: dict[tuple, tuple] = {}
     for _ in range(n_sec * n_layers + 1):
         try:
-            plan = _build_plan(
-                net, secondaries, host, overlap_rows, ratios, caps, auto_reduce
+            layout = _build_layout(
+                net, secondaries, host, overlap_rows, ratios, caps, auto_reduce,
+                conv_cache, inp_cache,
             )
-            _check_plan_messages(plan)
-            return plan
+            _check_layout(layout)
+            return layout
         except PlanInfeasible as exc:
             if not auto_reduce or not _reduce_caps(caps, exc, conv_anchor):
                 raise
     raise AssertionError("auto-reduce failed to converge")  # pragma: no cover
 
 
-def _reduce_caps(caps: list[int], exc: PlanInfeasible, conv_anchor: list[int]) -> bool:
-    """Shrink the active-secondary cap at the first reducible layer the
-    violation names; False when every candidate is already at one secondary
-    (the 'even N=1 fails' terminal case)."""
-    for j in exc.reduce_at:
-        if not 0 <= j < len(caps):
-            continue
-        j = conv_anchor[j]
-        eff = min(caps[: j + 1])
-        if eff > 1:
-            caps[j] = eff - 1
-            return True
-    return False
-
-
-def _build_plan(
+def _build_layout(
     net: ConvNetGeom,
     secondaries: tuple[str, ...],
     host: str,
@@ -414,24 +688,22 @@ def _build_plan(
     ratios: Sequence[float],
     caps: Sequence[int],
     auto_reduce: bool,
-) -> HALPPlan:
+    conv_cache: dict[tuple, tuple[int, ...]] | None = None,
+    inp_cache: dict[tuple, tuple] | None = None,
+) -> PlanLayout:
     n_sec = len(secondaries)
-    k_zones = n_sec - 1
-    zone_names = (
-        (host,) if k_zones == 1 else tuple(f"{host}#{j}" for j in range(k_zones))
-    )
-    slots: list[str] = []
-    owners: list[str] = []
-    for j, s in enumerate(secondaries):
-        slots.append(s)
-        owners.append(s)
-        if j < k_zones:
-            slots.append(zone_names[j])
-            owners.append(host)
-
+    n_slots = 2 * n_sec - 1
     sizes = net.sizes()
-    parts: list[LayerPartition] = []
+    aligns = _net_aligns(net)
+    bounds: list[tuple[int, ...]] = []
+    inp: list[tuple[tuple[int, int], ...]] = []
     active = n_sec
+    # Memos: nets repeat layer geometry (VGG blocks share the same (rows,
+    # alignment) for several convs), so within one candidate most layers are
+    # layout-identical -- compute each distinct one once.  plan_layout passes
+    # shared dicts so auto-reduce retries also reuse them.
+    conv_cache = {} if conv_cache is None else conv_cache
+    inp_cache = {} if inp_cache is None else inp_cache
     for i, g in enumerate(net.layers):
         o = sizes[i + 1]
         if auto_reduce:
@@ -439,52 +711,81 @@ def _build_plan(
             active = min(active, caps[i])
         if g.kind == "pool":
             # pools inherit the previous layer's boundaries (divided by stride).
-            prev = parts[-1].out
-            out = {}
-            lo = 1
-            for j, slot in enumerate(slots):
-                hi = o if j == len(slots) - 1 else prev[slot].hi // g.s
-                out[slot] = Segment(lo, hi)
-                lo = hi + 1
+            prev = bounds[-1]
+            bt = (0, *(prev[j] // g.s for j in range(1, n_slots)), o)
         else:
-            align = _pool_alignment(net, i, o)
-            if not auto_reduce:
-                counts = _conv_slot_rows(o, overlap_rows, ratios, align)
-            else:
-                while True:
-                    try:
-                        counts = _reduced_slot_rows(o, overlap_rows, ratios, align, active)
-                        break
-                    except ValueError as err:
-                        if active <= 1:
-                            raise PlanInfeasible(
-                                i,
-                                f"layer {i} ({o} output rows): {err}; even a single "
-                                f"active secondary does not fit -- use a larger input "
-                                f"or run this layer on one ES",
-                                reduce_at=(i,),
-                            ) from err
-                        active -= 1
-            out = {}
-            lo = 1
-            for slot, cnt in zip(slots, counts):
-                out[slot] = Segment(lo, lo + cnt - 1)
-                lo += cnt
-        inp = {
-            es: (
-                Segment(*input_range_exact(seg.lo, seg.hi, g.k, g.s, g.p, sizes[i]))
-                if seg
-                else EMPTY
+            align = aligns[i]
+            counts = conv_cache.get((o, align, active))
+            if counts is None:
+                if not auto_reduce:
+                    counts = _conv_slot_rows(o, overlap_rows, ratios, align)
+                else:
+                    while True:
+                        try:
+                            counts = _reduced_slot_rows(o, overlap_rows, ratios, align, active)
+                            break
+                        except ValueError as err:
+                            if active <= 1:
+                                raise PlanInfeasible(
+                                    i,
+                                    f"layer {i} ({o} output rows): {err}; even a single "
+                                    f"active secondary does not fit -- use a larger input "
+                                    f"or run this layer on one ES",
+                                    reduce_at=(i,),
+                                ) from err
+                            active -= 1
+                # keyed on the *final* active: a hit therefore implies the
+                # reduction loop already succeeded at this count, so the cap
+                # trajectory is identical to recomputing
+                conv_cache[(o, align, active)] = counts
+            b = [0]
+            for c in counts:
+                b.append(b[-1] + c)
+            bt = tuple(b)
+        bounds.append(bt)
+        ikey = (g.k, g.s, g.p, sizes[i], bt)
+        row = inp_cache.get(ikey)
+        if row is None:
+            k_, s_, p_ = g.k, g.s, g.p
+            size_in = sizes[i]
+            # inline input_range_exact (bounds are valid by construction)
+            row = tuple(
+                (max(bt[p] * s_ + 1 - p_, 1), min((bt[p + 1] - 1) * s_ + k_ - p_, size_in))
+                if bt[p + 1] > bt[p]
+                else EMPTY_IV
+                for p in range(n_slots)
             )
-            for es, seg in out.items()
+            inp_cache[ikey] = row
+        inp.append(row)
+    return PlanLayout(
+        net=net,
+        host=host,
+        secondaries=secondaries,
+        overlap_rows=overlap_rows,
+        ratios=tuple(ratios),
+        bounds=tuple(bounds),
+        inp=tuple(inp),
+    )
+
+
+def plan_from_layout(layout: PlanLayout) -> HALPPlan:
+    """Materialise a :class:`PlanLayout` into the full Segment-based plan."""
+    parts: list[LayerPartition] = []
+    for i in range(layout.n_layers):
+        b = layout.bounds[i]
+        out = {
+            slot: Segment(b[p] + 1, b[p + 1]) for p, slot in enumerate(layout.slots)
+        }
+        inp = {
+            slot: Segment(*layout.inp[i][p]) for p, slot in enumerate(layout.slots)
         }
         parts.append(LayerPartition(index=i, out=out, inp=inp))
     return HALPPlan(
-        net=net,
+        net=layout.net,
         parts=tuple(parts),
-        es_names=tuple(slots),
-        host=host,
-        slot_owner=tuple(owners),
+        es_names=layout.slots,
+        host=layout.host,
+        slot_owner=layout.owners,
     )
 
 
@@ -511,14 +812,34 @@ def plan_halp_topology(
     )
 
 
-def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
-    """N-way even split (used by the TPU spatial engine and the MoDNN baseline)."""
+def plan_even(net: ConvNetGeom, n: int, ratios: Sequence[float] | None = None) -> HALPPlan:
+    """N-way contiguous split (used by the TPU spatial engine and the MoDNN
+    baseline).
+
+    ``ratios`` weights the per-worker row shares (capacity-weighted splits for
+    heterogeneous pods -- a pod mixing TPU generations wants segment sizes
+    proportional to per-device effective FLOP/s, exactly like
+    :meth:`~repro.core.topology.CollabTopology.capacity_ratios` does for ES
+    clusters); the default stays the uniform split.  Any weighting is lossless
+    by construction -- the executable backstop
+    (``spatial/partition_apply.run_plan``) reconstructs every segment's input
+    from the same exact receptive-field algebra."""
+    if ratios is None:
+        ratios = [1.0 / n] * n
+    else:
+        ratios = list(ratios)
+        if len(ratios) != n:
+            raise ValueError(f"need one ratio per worker, got {len(ratios)} for n={n}")
+        total = sum(ratios)
+        if total <= 0 or any(r < 0 for r in ratios):
+            raise ValueError(f"ratios must be non-negative with a positive sum, got {ratios}")
+        ratios = [r / total for r in ratios]
     names = tuple(f"w{j}" for j in range(n))
     sizes = net.sizes()
     parts = []
     for i, g in enumerate(net.layers):
         o = sizes[i + 1]
-        segs = split_rows(o, [1.0 / n] * n)
+        segs = split_rows(o, ratios)
         out = dict(zip(names, segs))
         inp = {
             es: (
@@ -532,7 +853,7 @@ def plan_even(net: ConvNetGeom, n: int) -> HALPPlan:
     return HALPPlan(net=net, parts=tuple(parts), es_names=names)
 
 
-def _check_plan_messages(plan: HALPPlan) -> None:
+def _check_layout(layout: PlanLayout) -> None:
     """Enforce the message invariants both latency engines rely on.
 
     * **Secondaries never exchange rows directly** (the scheme's hard
@@ -546,37 +867,46 @@ def _check_plan_messages(plan: HALPPlan) -> None:
       uplink; ``events.sec_step`` prices sends to every zone), and rows moving
       between two host-owned zones never leave the host (a local move; the
       host computes layers in submission order, so the rows are resident)."""
-    order = {s: j for j, s in enumerate(plan.es_names)}
-    host = plan.host
-    for i in range(len(plan.parts) - 1):
-        for a in plan.es_names:
-            owner_a = plan.owner_of(a)
-            for b in plan.es_names:
-                if a == b:
+    slots = layout.slots
+    n_slots = layout.n_slots
+    for i in range(layout.n_layers - 1):
+        b = layout.bounds[i]
+        ninp = layout.inp[i + 1]
+        for pa in range(n_slots):
+            a_host = pa % 2 == 1  # odd positions are host-owned zones
+            own_lo, own_hi = b[pa] + 1, b[pa + 1]
+            if own_lo > own_hi:
+                continue  # empty source slot sends nothing
+            for pb in range(n_slots):
+                if pb == pa:
                     continue
-                owner_b = plan.owner_of(b)
-                if owner_a == owner_b == host:
+                b_host = pb % 2 == 1
+                if a_host and b_host:
                     continue  # zone-to-zone: host-local move
-                if owner_a != host and owner_b == host:
+                if not a_host and b_host:
                     continue  # sec -> any host zone: direct uplink, priced
-                adjacent = abs(order[a] - order[b]) <= 1
-                if adjacent and (owner_a == host) != (owner_b == host):
+                if abs(pa - pb) <= 1 and a_host != b_host:
                     continue  # adjacent host<->sec: the paper's boundary flow
-                seg = plan.message(i, a, b)
-                if not seg:
+                need = ninp[pb]
+                lo = max(need[0], own_lo)
+                hi = min(need[1], own_hi)
+                if lo > hi:
                     continue
-                if owner_a != host and owner_b != host:
+                lo, hi = _message_iv(need, (own_lo, own_hi), (b[pb] + 1, b[pb + 1]))
+                if lo > hi:
+                    continue
+                if not a_host and not b_host:
                     raise PlanInfeasible(
                         i,
-                        f"layer {i}: secondaries {a} and {b} would exchange rows "
-                        f"{seg.lo}..{seg.hi} directly; widen the overlap zone, "
+                        f"layer {i}: secondaries {slots[pa]} and {slots[pb]} would "
+                        f"exchange rows {lo}..{hi} directly; widen the overlap zone, "
                         f"rebalance the segment ratios, or enable auto_reduce",
                         reduce_at=(i + 1, i),
                     )
                 raise PlanInfeasible(
                     i,
-                    f"layer {i}: zone {a} would need to send rows "
-                    f"{seg.lo}..{seg.hi} to non-adjacent secondary {b}; widen "
+                    f"layer {i}: zone {slots[pa]} would need to send rows "
+                    f"{lo}..{hi} to non-adjacent secondary {slots[pb]}; widen "
                     f"the overlap zone or rebalance the segment ratios",
                     reduce_at=(i + 1, i),
                 )

@@ -15,11 +15,19 @@ per-link conditions instead.  This module does that end to end:
 * :func:`place_tasks` -- the placement optimizer: greedy capacity-weighted
   (LPT-style) assignment of secondaries to tasks, a local-search pass that
   swaps/moves ESs between tasks, and per-task plan-knob refinement via
-  :func:`~repro.core.optimizer.optimize_plan`.  Candidates are scored by the
-  discrete-event simulator through
-  :func:`~repro.core.events.build_multitask_dag`, which keys resources by
-  *physical* ES/link names -- shared host and link contention across tasks is
-  therefore modelled by construction, not estimated.
+  :func:`~repro.core.optimizer.optimize_plan` (warm-started from the
+  incumbent plan's knobs).  Candidates are scored by the discrete-event
+  simulator through :func:`~repro.core.events.build_multitask_dag`, which
+  keys resources by *physical* ES/link names -- shared host and link
+  contention across tasks is therefore modelled by construction, not
+  estimated.  With ``engine="batched"`` (default) each pair-scan's swap/move
+  neighbourhood is priced speculatively as one
+  :class:`~repro.core.events.MultitaskBatchEvaluator` sweep (plan layouts +
+  cached multi-task DAG templates + ``Sim.run_batch``) with an
+  assignment-keyed memo; ``engine="scalar"`` keeps the historical
+  one-candidate-at-a-time pricing callable as the benchmark baseline.  The
+  engines share the search loop and score bit-identically, so they return
+  the same placement.
 
 * :func:`shared_plan_placement` -- the paper-faithful baseline the benchmark
   compares against: secondaries grouped in pool order, every task running the
@@ -42,10 +50,11 @@ scenario with per-task placement beating the shared-plan baseline.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Sequence
 
-from .events import build_multitask_dag
+from .events import MultitaskBatchEvaluator, _layout_cached, build_multitask_dag
 from .nets import ConvNetGeom
 from .optimizer import optimize_plan
 from .partition import HALPPlan, plan_halp_topology
@@ -215,6 +224,7 @@ def place_tasks(
     optimize_final: bool = True,
     overlap_choices: Sequence[int] = (2, 4, 6, 8),
     max_rounds: int = 4,
+    engine: str = "batched",
 ) -> PlacementResult:
     """Partition the pool's secondaries across ``n_tasks`` concurrent tasks.
 
@@ -228,19 +238,28 @@ def place_tasks(
        pair and moving single ESs from larger groups; accept strict
        improvements, repeat up to ``swap_rounds`` rounds or to convergence.
        This is where link asymmetry gets fixed: a fast ES behind a slow link
-       migrates to the task that loads its uplink least.
+       migrates to the task that loads its uplink least.  With
+       ``engine="batched"`` each pair's whole swap/move neighbourhood is
+       priced speculatively in one vectorized DES sweep and memoised by
+       assignment, so the sequential acceptance scan below is mostly memo
+       hits; ``engine="scalar"`` prices one candidate at a time (the
+       pre-template baseline, kept callable for ``benchmarks/planner_speed``).
+       Both engines score bit-identically and return the same placement.
     3. **Per-task plan refinement** (``optimize_final``) -- each winner group's
        (ratios, overlap) knobs searched by
-       :func:`~repro.core.optimizer.optimize_plan` on its own sub-topology;
-       the refined plan set is kept only if it improves the joint score
-       (per-task refinement ignores host contention, so it is re-validated
-       jointly).
+       :func:`~repro.core.optimizer.optimize_plan` on its own sub-topology,
+       warm-started from the incumbent plan's capacity-ratio knobs and using
+       the same pricing ``engine``; the refined plan set is kept only if it
+       improves the joint score (per-task refinement ignores host contention,
+       so it is re-validated jointly).
 
     Requires ``len(pool.secondaries) >= n_tasks * min_per_task``."""
     if n_tasks < 1:
         raise ValueError(f"need at least one task, got {n_tasks}")
     if objective not in ("avg_delay", "makespan"):
         raise ValueError(f"objective must be 'avg_delay' or 'makespan', got {objective!r}")
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"engine must be 'batched' or 'scalar', got {engine!r}")
     if pool.n_secondaries < n_tasks * min_per_task:
         raise ValueError(
             f"pool has {pool.n_secondaries} secondaries; {n_tasks} tasks need "
@@ -248,22 +267,75 @@ def place_tasks(
         )
     evals = 0
     history: list[tuple[tuple[tuple[str, ...], ...], float]] = []
+    evaluator = (
+        MultitaskBatchEvaluator(net, pool, overlap_rows=overlap_rows)
+        if engine == "batched"
+        else None
+    )
+    # assignment-keyed score memo (batched engine only -- the scalar engine
+    # keeps the historical price-every-candidate cost the benchmark measures)
+    memo: dict[tuple, float] = {}
 
-    def priced(groups: list[list[str]]) -> tuple[float, tuple | None, tuple | None]:
+    def price_all(cands: Sequence[Sequence[Sequence[str]]]) -> list[float]:
         nonlocal evals
-        evals += 1
-        try:
-            plans, knobs = _plans_for(net, pool, groups, overlap_rows)
-            score = _score(net, pool, plans, objective)
-        except (AssertionError, ValueError):
-            return float("inf"), None, None
-        history.append((tuple(tuple(g) for g in groups), score))
-        return score, plans, knobs
+        keys = [tuple(tuple(g) for g in c) for c in cands]
+        out: list[float | None] = [None] * len(cands)
+        if evaluator is not None:
+            for k, kk in enumerate(keys):
+                if kk in memo:
+                    out[k] = memo[kk]
+            fresh = [(k, keys[k]) for k in range(len(cands)) if out[k] is None]
+            if fresh:
+                results = evaluator.evaluate([kk for _, kk in fresh])
+                evals += len(fresh)
+                for (k, kk), res in zip(fresh, results):
+                    if res is None:
+                        v = float("inf")
+                    else:
+                        v = res["total"] if objective == "makespan" else res["avg_delay"]
+                        history.append((kk, v))
+                    memo[kk] = v
+                    out[k] = v
+        else:
+            for k, kk in enumerate(keys):
+                evals += 1
+                try:
+                    plans, _knobs = _plans_for(net, pool, kk, overlap_rows)
+                    v = _score(net, pool, plans, objective)
+                    history.append((kk, v))
+                except (AssertionError, ValueError):
+                    v = float("inf")
+                out[k] = v
+        return [v if v is not None else float("inf") for v in out]
 
     rank = {s: j for j, s in enumerate(_ranked(pool))}  # invariant per call
+
+    def apply_move(groups, t1: int, t2: int, s1, s2):
+        """The move's resulting assignment, or None if it is no longer valid
+        against the *current* groups (they mutate when accepts land mid-scan)."""
+        if s1 is not None and s1 not in groups[t1]:
+            return None
+        if s2 is not None and s2 not in groups[t2]:
+            return None
+        if s1 is None and len(groups[t2]) <= min_per_task:
+            return None
+        if s2 is None and len(groups[t1]) <= min_per_task:
+            return None
+        cand = [list(g) for g in groups]
+        if s1 is not None:
+            cand[t1].remove(s1)
+            cand[t2].append(s1)
+        if s2 is not None:
+            cand[t2].remove(s2)
+            cand[t1].append(s2)
+        # keep fastest-first order inside each group
+        for g in cand:
+            g.sort(key=lambda s: rank[s])
+        return cand
+
     groups = _greedy_groups(pool, n_tasks, min_per_task)
-    best, best_plans, best_knobs = priced(groups)
-    if best_plans is None:
+    best = price_all([groups])[0]
+    if not math.isfinite(best):
         raise ValueError(
             f"no feasible placement for {n_tasks} tasks on this pool "
             f"(greedy assignment {groups} has no valid HALP plan)"
@@ -282,47 +354,72 @@ def place_tasks(
                 for s2 in groups[t2]:
                     if len(groups[t2]) > min_per_task:
                         candidates.append((None, s2))  # move t2 -> t1
-                for s1, s2 in candidates:
-                    # groups mutate when a candidate is accepted mid-scan;
-                    # re-validate the move against the *current* assignment
-                    if s1 is not None and s1 not in groups[t1]:
+                if evaluator is not None:
+                    # speculative batch: the whole neighbourhood of the current
+                    # assignment in one vectorized sweep; the acceptance scan
+                    # below then runs on memo hits until the base moves
+                    price_all(
+                        [c for s1, s2 in candidates if (c := apply_move(groups, t1, t2, s1, s2))]
+                    )
+                for idx, (s1, s2) in enumerate(candidates):
+                    cand = apply_move(groups, t1, t2, s1, s2)
+                    if cand is None:
                         continue
-                    if s2 is not None and s2 not in groups[t2]:
-                        continue
-                    if s1 is None and len(groups[t2]) <= min_per_task:
-                        continue
-                    if s2 is None and len(groups[t1]) <= min_per_task:
-                        continue
-                    cand = [list(g) for g in groups]
-                    if s1 is not None:
-                        cand[t1].remove(s1)
-                        cand[t2].append(s1)
-                    if s2 is not None:
-                        cand[t2].remove(s2)
-                        cand[t1].append(s2)
-                    # keep fastest-first order inside each group
-                    for g in cand:
-                        g.sort(key=lambda s: rank[s])
-                    score, plans, knobs = priced(cand)
+                    score = price_all([cand])[0]
                     if score < best - 1e-15:
-                        best, best_plans, best_knobs = score, plans, knobs
+                        best = score
                         groups = cand
                         improved = True
+                        if evaluator is not None:
+                            price_all(
+                                [
+                                    c
+                                    for m1, m2 in candidates[idx + 1 :]
+                                    if (c := apply_move(groups, t1, t2, m1, m2))
+                                ]
+                            )
         if not improved:
             break
+
+    best_plans, best_knobs = _plans_for(net, pool, groups, overlap_rows)
+
+    def joint_score(plans: Sequence[HALPPlan], knobs) -> dict | None:
+        """One shared-pool DES run of an explicit plan set: the batched engine
+        prices it through the template path (bit-identical), the scalar
+        engine through ``simulate_placement``'s machinery."""
+        if evaluator is not None:
+            layouts = [
+                _layout_cached(net, tuple(g), pool.host, w, tuple(r))
+                for g, (r, w) in zip(groups, knobs)
+            ]
+            if all(lay is not None for lay in layouts):
+                return evaluator.evaluate_layout_sets([layouts])[0]
+        run = _simulate_plans(net, plans, pool)
+        return dict(
+            total=run["total"],
+            avg_delay=run["avg_delay"],
+            per_task_finish=tuple(run["per_task_finish"]),
+        )
 
     if optimize_final:
         refined_plans = []
         refined_knobs = []
-        for group in groups:
+        for group, (init_ratios, _w) in zip(groups, best_knobs):
             sub = pool.sub_topology(group)
             res = optimize_plan(
-                net, sub, n_tasks=1, overlap_choices=overlap_choices, max_rounds=max_rounds
+                net,
+                sub,
+                n_tasks=1,
+                overlap_choices=overlap_choices,
+                max_rounds=max_rounds,
+                init_ratios=init_ratios,  # warm start: the incumbent plan's knobs
+                engine=engine,
             )
             refined_plans.append(res.plan)
             refined_knobs.append((res.ratios, res.overlap_rows))
             evals += res.evaluations
-        score = _score(net, pool, refined_plans, objective)
+        run = joint_score(refined_plans, refined_knobs)
+        score = run["total"] if objective == "makespan" else run["avg_delay"]
         evals += 1
         if score < best:
             best, best_plans, best_knobs = score, tuple(refined_plans), tuple(refined_knobs)
@@ -332,12 +429,12 @@ def place_tasks(
         assignments=tuple(tuple(g) for g in groups),
         plans=best_plans,
     )
-    sim = simulate_placement(net, placement)
+    final = joint_score(best_plans, best_knobs)
     return PlacementResult(
         placement=placement,
-        makespan=sim["total"],
-        avg_delay=sim["avg_delay"],
-        per_task_finish=tuple(sim["per_task_finish"]),
+        makespan=final["total"],
+        avg_delay=final["avg_delay"],
+        per_task_finish=tuple(final["per_task_finish"]),
         knobs=best_knobs,
         evaluations=evals,
         history=history,

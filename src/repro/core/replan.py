@@ -219,6 +219,16 @@ class ReplanConfig:
     n_tasks: int = 4  # concurrent tasks the plan is optimised for
     overlap_choices: tuple[int, ...] = (2, 4, 6, 8)
     max_rounds: int = 6  # coordinate-descent budget per re-optimisation
+    # Candidate-pricing engine for cache-miss re-optimisations.  "batched"
+    # (the DAG-template + vectorized-DES fast path) and "scalar" return
+    # bit-identical plans; the knob exists so benchmarks can price the miss
+    # path both ways.  Misses therefore pay the fast path by default.
+    engine: str = "batched"
+    # Hard planner-latency bounds for the miss path (None/0.0 = unbounded):
+    # eval_budget caps priced candidates per optimize_plan call, tol stops a
+    # replan once a descent round improves the makespan by less than this.
+    eval_budget: int | None = None
+    tol: float = 0.0
     # Objective engine.  The DES is the repo's ground truth and the default:
     # the closed form prices each secondary slot's uplink as shared across
     # tasks (eq. 17's x n_tasks) while the DES models the paper's multi-task
@@ -256,6 +266,9 @@ def _optimize_against(
         overlap_choices=config.overlap_choices,
         max_rounds=config.max_rounds,
         objective=objective,
+        engine=config.engine,
+        eval_budget=config.eval_budget,
+        tol=config.tol,
     )
 
 
@@ -325,6 +338,11 @@ class ReplanController:
             tuple(config.overlap_choices),
             config.max_rounds,
             config.use_simulator,
+            # search-bounding knobs change which plan a miss produces, so they
+            # must key; the pricing engine does NOT (bit-identical scores) --
+            # batched and scalar controllers share entries by design
+            config.eval_budget,
+            config.tol,
         )
         self._active = self._bucket_key()
         self._pending_count = 0  # consecutive epochs spent outside the active bands

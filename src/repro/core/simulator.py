@@ -24,6 +24,8 @@ import random
 from dataclasses import dataclass
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from .events import build_halp_dag, init_bytes, resolve_halp_setup
 from .nets import ConvNetGeom
 from .partition import HALPPlan, plan_even
@@ -33,6 +35,7 @@ from .topology import CollabTopology, Link, Platform
 __all__ = [
     "Sim",
     "Job",
+    "BatchRun",
     "simulate_halp",
     "simulate_modnn",
     "enhanced_modnn_delay",
@@ -52,17 +55,34 @@ class Job:
     finish: float = 0.0
 
 
+@dataclass
+class BatchRun:
+    """Result of :meth:`Sim.run_batch`: one DES sweep over B duration vectors.
+
+    ``makespan[b]`` is candidate ``b``'s makespan; ``finish[j, b]`` the finish
+    time of job ``j`` under candidate ``b`` (``finish_of`` mirrors
+    :meth:`Sim.finish_of` for per-task head lookups)."""
+
+    makespan: np.ndarray  # [B]
+    finish: np.ndarray  # [J, B]
+
+    def finish_of(self, jid: int) -> np.ndarray:
+        return self.finish[jid]
+
+
 class Sim:
     """Static list-scheduling simulator over FIFO resources."""
 
     def __init__(self) -> None:
         self.jobs: list[Job] = []
         self.slowdown: dict[str, float] = {}
+        self._batch_deps: list[list[int]] | None = None
 
     def add(self, name: str, resource: str, duration: float, deps=()) -> int:
         jid = len(self.jobs)
         deps = tuple(d for d in deps if d is not None)
         self.jobs.append(Job(jid, name, resource, max(0.0, duration), deps))
+        self._batch_deps = None
         return jid
 
     def run(self) -> float:
@@ -86,6 +106,95 @@ class Sim:
 
     def finish_of(self, jid: int) -> float:
         return self.jobs[jid].finish
+
+    def _merged_deps(self) -> list[list[int]]:
+        """Per-job dependency lists with the FIFO resource edge folded in.
+
+        A job's start is ``max(dep finishes, previous job on its resource)``;
+        adding the resource predecessor as an explicit edge turns the forward
+        pass into a pure longest-path sweep, which is what lets ``run_batch``
+        drop the per-candidate ``free`` bookkeeping.  Cached until the next
+        :meth:`add`."""
+        if self._batch_deps is None:
+            merged: list[list[int]] = []
+            last_on: dict[str, int] = {}
+            for job in self.jobs:
+                deps = list(job.deps)
+                prev = last_on.get(job.resource)
+                if prev is not None:
+                    deps.append(prev)
+                merged.append(deps)
+                last_on[job.resource] = job.jid
+            self._batch_deps = merged
+        return self._batch_deps
+
+    def run_batch(self, durations: np.ndarray | None = None) -> BatchRun:
+        """Vectorized DES: score B duration vectors in one forward sweep.
+
+        ``durations`` is a ``[B, J]`` (or ``[J]``) array of per-job durations
+        -- typically produced by a :class:`~repro.core.events.DagTemplate` for
+        B candidate plans sharing this Sim's job/message structure; ``None``
+        scores the jobs' own durations (B = 1).  Per-resource ``slowdown``
+        factors apply exactly as in :meth:`run`.
+
+        Bit-consistent with the scalar :meth:`run`: the same float operations
+        run in the same dependency order, only batched across candidates
+        (``tests/test_conformance.py`` pins float *equality*, not closeness).
+        Unlike :meth:`run` this does not mutate job start/finish state."""
+        n_jobs = len(self.jobs)
+        if durations is None:
+            durations = np.array([[job.duration for job in self.jobs]])
+        else:
+            durations = np.asarray(durations, dtype=np.float64)
+            if durations.ndim == 1:
+                durations = durations[None, :]
+            if durations.shape[1] != n_jobs:
+                raise ValueError(
+                    f"durations have {durations.shape[1]} jobs, sim has {n_jobs}"
+                )
+        if self.slowdown:
+            factors = np.array(
+                [self.slowdown.get(job.resource, 1.0) for job in self.jobs]
+            )
+            durations = durations * factors
+        n_batch = durations.shape[0]
+        merged = self._merged_deps()
+        if n_batch * n_jobs <= 4096:
+            # Small batches: plain-float forward passes beat per-job numpy
+            # dispatch overhead.  max/+ on Python floats and on float64 arrays
+            # are the same IEEE-754 operations, so this path is bit-identical
+            # to the vectorized one below.
+            finish = np.empty((n_jobs, n_batch))
+            for b in range(n_batch):
+                dur_b = durations[b].tolist()
+                fin: list[float] = [0.0] * n_jobs
+                for j, deps in enumerate(merged):
+                    ready = 0.0
+                    for d in deps:
+                        fd = fin[d]
+                        if fd > ready:
+                            ready = fd
+                    fin[j] = ready + dur_b[j]
+                finish[:, b] = fin
+            makespan = finish.max(axis=0) if n_jobs else np.zeros(n_batch)
+            return BatchRun(makespan=makespan, finish=finish)
+        dur = np.ascontiguousarray(durations.T)  # [J, B]
+        finish = np.empty((n_jobs, n_batch))
+        maximum = np.maximum
+        add = np.add
+        for j, deps in enumerate(merged):
+            row = finish[j]
+            if not deps:
+                row[:] = dur[j]
+            elif len(deps) == 1:
+                add(finish[deps[0]], dur[j], out=row)
+            else:
+                maximum(finish[deps[0]], finish[deps[1]], out=row)
+                for d in deps[2:]:
+                    maximum(row, finish[d], out=row)
+                row += dur[j]
+        makespan = finish.max(axis=0) if n_jobs else np.zeros(n_batch)
+        return BatchRun(makespan=makespan, finish=finish)
 
 
 def _chunk_time(net: ConvNetGeom, platform: Platform, i: int, rows: int) -> float:

@@ -11,8 +11,12 @@ partitioning *and* the message algebra.
 The executor is topology-agnostic: it walks ``plan.es_names`` generically, so
 the same code runs the paper's symmetric ``(e1, e0, e2)`` triple, N-way
 capacity-weighted heterogeneous plans (``plan_halp_n`` with skewed ratios and
-multiple host zones), and the even splits of the TPU spatial engine.  This is
-the correctness backstop for every plan the optimizer may propose.
+multiple host zones), and the worker splits of the TPU spatial engine --
+including capacity-weighted ``plan_even(..., ratios=...)`` splits for pods
+mixing device generations (row shares proportional to per-device FLOP/s).
+This is the correctness backstop for every plan the optimizer may propose,
+batched or scalar (the batched engine's layouts materialise through the very
+same ``plan_from_layout`` path this executor consumes).
 
 Runs on a single device (no shard_map): this is the semantic model. The SPMD
 deployment form lives in ``repro.spatial.halo``.

@@ -94,6 +94,19 @@ def test_multitask_placement_acceptance():
     assert out["plans_verified_lossless"] == 8
 
 
+def test_planner_speed_acceptance():
+    """The batched planning engine must return plans *equal* to the scalar
+    path in every scenario (shared search loop, bit-identical pricing) at a
+    >= 5x median speedup floor.  Full runs track the >= 10x single-task
+    optimize target in BENCH_planner.json; the smoke floor absorbs CI noise."""
+    from benchmarks import planner_speed
+
+    out = planner_speed.run_all(smoke=True, out_path=None)
+    for name, sc in out["scenarios"].items():
+        assert sc["plans_equal"], f"{name}: engines returned different plans"
+        assert sc["speedup"] >= 5.0, (name, sc["speedup"])
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""

@@ -11,8 +11,22 @@ the grid immediately.
 Also pinned here: the tightened multi-task host term (``multitask_bound=
 "list"``) is never looser than the paper's eq. 22 (``"eq22"``) anywhere on
 the grid, and strictly tighter where K > 1 zones meet asymmetric links.
+
+The vectorized DES (``Sim.run_batch``) and the batched candidate evaluator
+(``events.HalpBatchEvaluator``: plan layouts + DAG templates) must match the
+scalar engines to float *equality* -- not closeness -- on every cell: the
+online planner's batched fast path is only trustworthy if it is the same
+simulator, and any drift in the layout/template factorisation shows up here
+as a single-bit diff.  Hypothesis property tests extend the same claim to
+random plans and random per-resource slowdowns.
 """
+import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     AGX_XAVIER,
@@ -24,6 +38,8 @@ from repro.core import (
     standalone_time,
     vgg16_geom,
 )
+from repro.core.events import HalpBatchEvaluator, MultitaskBatchEvaluator
+from repro.core.optimizer import evaluate_plan
 from repro.core.simulator import Sim
 
 NET = vgg16_geom()
@@ -125,6 +141,125 @@ def test_tightened_bound_strictly_tighter_where_k_gt_1():
 def test_multitask_bound_rejects_unknown_mode():
     with pytest.raises(ValueError, match="multitask_bound"):
         halp_closed_form(NET, GTX_1080TI, Link(40e9), multitask_bound="magic")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized DES + batched evaluator: float equality with the scalar engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_sec,kind,n_tasks", GRID)
+def test_run_batch_matches_scalar_sim(n_sec, kind, n_tasks):
+    """Both ``run_batch`` code paths (plain-float small-batch and numpy
+    wide-batch) must reproduce the scalar ``Sim.run`` makespan exactly."""
+    topo = TOPOLOGIES[kind](n_sec)
+    res = simulate_halp(NET, topology=topo, n_tasks=n_tasks)
+    sim = res["sim"]
+    small = sim.run_batch()  # B=1: the plain-float path
+    assert float(small.makespan[0]) == res["total"]
+    durations = np.array([[job.duration for job in sim.jobs]])
+    wide = sim.run_batch(np.repeat(durations, 40, axis=0))  # forces numpy path
+    assert all(float(m) == res["total"] for m in wide.makespan)
+
+
+@pytest.mark.parametrize("n_sec,kind,n_tasks", GRID)
+def test_batched_evaluator_matches_evaluate_plan(n_sec, kind, n_tasks):
+    """Layout + template + run_batch candidate scores == plan build + DAG
+    build + scalar DES, bit for bit, across ratios/overlap candidates."""
+    topo = TOPOLOGIES[kind](n_sec)
+    n = topo.n_secondaries
+    skewed = tuple(j + 1.0 for j in range(n))
+    total = sum(skewed)
+    cands = [
+        (tuple(1.0 / n for _ in range(n)), 4),
+        (tuple(r / total for r in skewed), 2),
+        (tuple(r / total for r in reversed(skewed)), 8),
+    ]
+    evaluator = HalpBatchEvaluator(NET, topo, n_tasks=n_tasks)
+    batched = evaluator.evaluate(cands)
+    scalar = [evaluate_plan(NET, topo, r, w, n_tasks=n_tasks) for r, w in cands]
+    assert batched == scalar
+
+
+def test_multitask_evaluator_matches_simulate_placement():
+    """The shared-pool (physical-resource) template path must equal the
+    scalar multi-task DES on makespan, mean delay, and per-task finishes."""
+    from repro.core.placement import shared_plan_placement, simulate_placement
+
+    pool = skew_topology(5).with_links({})
+    ev = MultitaskBatchEvaluator(NET, pool)
+    groups = (("e1", "e4"), ("e2", "e3", "e5"))
+    res = ev.evaluate([groups])[0]
+    from repro.core.partition import plan_halp_topology
+
+    plans = [
+        plan_halp_topology(NET, pool.sub_topology(g), overlap_rows=4)
+        for g in groups
+    ]
+    from repro.core.placement import _simulate_plans
+
+    ref = _simulate_plans(NET, plans, pool)
+    assert res["total"] == ref["total"]
+    assert res["avg_delay"] == ref["avg_delay"]
+    assert res["per_task_finish"] == tuple(ref["per_task_finish"])
+
+
+@given(
+    n_sec=st.integers(min_value=2, max_value=4),
+    overlap=st.sampled_from([2, 4, 6, 8]),
+    data=st.data(),
+)
+@settings(max_examples=10, deadline=None)
+def test_run_batch_matches_scalar_under_random_plans_and_slowdowns(
+    n_sec, overlap, data
+):
+    """Property: for random ratios, overlap widths, and per-resource slowdown
+    factors, the vectorized forward pass equals the scalar DES exactly."""
+    raw = [
+        data.draw(st.integers(min_value=1, max_value=9), label=f"r{j}")
+        for j in range(n_sec)
+    ]
+    ratios = tuple(r / sum(raw) for r in raw)
+    topo = skew_topology(n_sec)
+    res = simulate_halp(NET, topology=topo, ratios=ratios, overlap_rows=overlap)
+    sim = res["sim"]
+    resources = sorted({job.resource for job in sim.jobs})
+    for res_name in resources[:: max(1, len(resources) // 3)]:
+        sim.slowdown[res_name] = 1.0 + data.draw(
+            st.integers(min_value=0, max_value=30), label="slow"
+        ) / 10.0
+    scalar = sim.run()
+    batch = sim.run_batch()
+    assert float(batch.makespan[0]) == scalar
+    # and the wide-batch numpy path agrees with itself and the scalar run
+    durations = np.array([[job.duration for job in sim.jobs]])
+    wide = sim.run_batch(np.repeat(durations, 40, axis=0))
+    assert all(float(m) == scalar for m in wide.makespan)
+
+
+@given(
+    n_sec=st.integers(min_value=2, max_value=4),
+    overlap=st.sampled_from([2, 4, 6, 8]),
+    n_tasks=st.sampled_from([1, 3]),
+    data=st.data(),
+)
+@settings(max_examples=10, deadline=None)
+def test_batched_evaluator_property(n_sec, overlap, n_tasks, data):
+    """Property: batched candidate scores equal the scalar pricing path for
+    random ratio simplex points (including heavily skewed, auto-reducing and
+    infeasible ones, which must price +inf identically)."""
+    raw = [
+        data.draw(st.integers(min_value=0, max_value=9), label=f"r{j}")
+        for j in range(n_sec)
+    ]
+    if sum(raw) == 0:
+        raw[0] = 1
+    ratios = tuple(r / sum(raw) for r in raw)
+    topo = skew_topology(n_sec)
+    evaluator = HalpBatchEvaluator(NET, topo, n_tasks=n_tasks)
+    batched = evaluator.evaluate([(ratios, overlap)])
+    scalar = [evaluate_plan(NET, topo, ratios, overlap, n_tasks=n_tasks)]
+    assert batched == scalar
 
 
 @pytest.mark.parametrize("n_tasks", [1, 4])

@@ -47,6 +47,39 @@ def test_even_plan_lossless(vgg_setup, n):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize(
+    "ratios",
+    [
+        (0.7, 0.3),
+        (0.5, 0.3, 0.2),
+        (4.0, 2.0, 1.0, 1.0),  # un-normalised capacity weights
+    ],
+)
+def test_weighted_even_plan_lossless(vgg_setup, ratios):
+    """Capacity-weighted splits for heterogeneous pods (a pod mixing device
+    generations wants row shares proportional to per-device FLOP/s) must stay
+    bit-compatible with single-device inference -- the same executable
+    backstop that pins the uniform split."""
+    params, x, ref = vgg_setup
+    plan = plan_even(CFG.geom(), len(ratios), ratios=ratios)
+    norm = [r / sum(ratios) for r in ratios]
+    # the weighting actually takes effect: first worker's share ~ its ratio
+    rows0 = plan.parts[0].out["w0"].rows
+    total0 = sum(plan.parts[0].out[es].rows for es in plan.es_names)
+    assert abs(rows0 / total0 - norm[0]) < 0.1
+    out = run_plan(plan, params["features"], vgg.apply_layer, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_weighted_even_plan_rejects_bad_ratios():
+    import pytest as _pytest
+
+    with _pytest.raises(ValueError, match="one ratio per worker"):
+        plan_even(CFG.geom(), 3, ratios=(0.5, 0.5))
+    with _pytest.raises(ValueError, match="non-negative"):
+        plan_even(CFG.geom(), 2, ratios=(1.0, -0.5))
+
+
 def test_halp_plan_lossless_other_overlaps(vgg_setup):
     params, x, ref = vgg_setup
     for w in (2, 6, 8):

@@ -317,3 +317,89 @@ def test_segment_basics():
     assert Segment(3, 2).rows == 0
     assert not Segment(3, 2)
     assert Segment(1, 5).intersect(Segment(4, 9)) == Segment(4, 5)
+
+
+# ---------------------------------------------------------------------------
+# batched-engine controls: eval_budget, tol, engine equality
+# ---------------------------------------------------------------------------
+
+
+def test_optimizer_engines_return_identical_plans():
+    """Batched and scalar pricing share one search loop and bit-identical
+    scores, so the returned plan must be *equal*, not merely close."""
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9), n_secondaries=3)
+    batched = optimize_plan(NET, topo)
+    scalar = optimize_plan(NET, topo, engine="scalar")
+    assert batched.ratios == scalar.ratios
+    assert batched.overlap_rows == scalar.overlap_rows
+    assert batched.makespan == scalar.makespan
+
+
+def test_optimizer_engines_identical_under_eval_budget():
+    """Under an eval_budget the batched engine must not speculate (it would
+    spend the budget on candidates the scalar engine never prices), so both
+    engines cut the budget at the same candidate and return the same plan --
+    the property the replan cache relies on to share entries across engines."""
+    skewed = CollabTopology(
+        host="e0",
+        secondaries=("a", "b", "c"),
+        platforms={
+            "e0": GTX_1080TI,
+            "a": GTX_1080TI,
+            "b": GTX_1080TI.scaled(0.5, "b"),
+            "c": GTX_1080TI.scaled(0.25, "c"),
+        },
+        links={
+            ("e0", "a"): Link(40e9), ("a", "e0"): Link(40e9),
+            ("e0", "b"): Link(8e9), ("b", "e0"): Link(8e9),
+            ("e0", "c"): Link(20e9), ("c", "e0"): Link(20e9),
+        },
+        default_link=Link(40e9),
+    )
+    for budget in (8, 30):
+        batched = optimize_plan(NET, skewed, eval_budget=budget)
+        scalar = optimize_plan(NET, skewed, eval_budget=budget, engine="scalar")
+        assert batched.ratios == scalar.ratios, budget
+        assert batched.overlap_rows == scalar.overlap_rows, budget
+        assert batched.makespan == scalar.makespan, budget
+        assert batched.evaluations == scalar.evaluations <= budget
+
+
+def test_optimizer_eval_budget_caps_priced_candidates():
+    """eval_budget is the hard bound a controller puts on worst-case replan
+    latency: the search must stop pricing at the cap and still return the
+    best feasible plan found within it."""
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9))
+    full = optimize_plan(NET, topo)
+    capped = optimize_plan(NET, topo, eval_budget=6)
+    assert capped.evaluations <= 6
+    assert math.isfinite(capped.makespan)
+    assert capped.makespan >= full.makespan  # less search can't do better
+    with pytest.raises(ValueError, match="eval_budget"):
+        optimize_plan(NET, topo, eval_budget=0)
+
+
+def test_optimizer_tol_early_exit_trades_quality_for_latency():
+    """A large tol stops after the first descent round; the result is valid
+    and never better than the unbounded search, with fewer evaluations."""
+    slow = GTX_1080TI.scaled(0.4, "slow")
+    topo = CollabTopology(
+        host="e0",
+        secondaries=("fast", "slow"),
+        platforms={"e0": GTX_1080TI, "fast": GTX_1080TI, "slow": slow},
+        default_link=Link(10e9),
+    )
+    full = optimize_plan(NET, topo)
+    quick = optimize_plan(NET, topo, tol=float("inf"))
+    assert quick.evaluations < full.evaluations
+    assert math.isfinite(quick.makespan)
+    assert quick.makespan >= full.makespan
+    # tol=0 (default) must not early-exit: identical to the full search
+    default = optimize_plan(NET, topo, tol=0.0)
+    assert default.makespan == full.makespan
+
+
+def test_optimizer_rejects_unknown_engine():
+    topo = CollabTopology.symmetric(GTX_1080TI, Link(40e9))
+    with pytest.raises(ValueError, match="engine"):
+        optimize_plan(NET, topo, engine="magic")
