@@ -1,0 +1,262 @@
+"""Straggler sweep: static vs link-only vs joint compute+link adaptation.
+
+The paper re-plans for nothing; PR 2 closed the loop for *link* rates only.
+The authors' own prototype (arXiv 2211.13778) and DistrEdge (arXiv 2202.01699)
+both find that measured per-device compute drifts as much as the channel: a
+secondary ES that thermally throttles or picks up co-located load stretches
+every makespan while holding the same row share.  This sweep replays a
+straggling secondary through the discrete-event simulator and compares three
+policies on identical traces (``repro.core.simulator.replay_trace``):
+
+* **static**    -- one plan optimised for the nominal rates (the paper's
+  deployment model: no measurement ever reaches the plan),
+* **link_only** -- :class:`~repro.core.replan.ReplanController` with
+  ``adapt_compute=False``: the PR-2 controller, blind to compute drift (it
+  sees the same compute probes, but drops them),
+* **joint**     -- the same controller with compute adaptation on (default):
+  per-ES EWMA compute estimates -> nominal-anchored geometric bands -> the
+  shared hysteresis/cache/optimise loop.
+
+Scenario: one Xavier-class host and two Xavier-class secondaries on nominal
+2.5 Gbps ES-ES links (compute-dominant at VGG-16 scale).  Secondary ``b``
+straggles: its effective FLOP/s wanders over 0.3-1.0x nominal (mean-reverting
+around 0.45x -- sustained degradation with recovery excursions) while both
+ES-ES links drift mildly (0.8-2.5 Gbps, so the link-only controller has real
+channel work to do and its disadvantage is purely the compute blindness).
+Reliability per epoch is §V.D's ``Phi((D - mu_off - T_inf) / sigma)`` with
+``T_inf`` the DES makespan of the plan the policy served *that epoch* under
+the *true* rates, at Table III's middle fluctuation level.
+
+A second, no-drift scenario pins the equality regression: with compute frozen
+at the nominals, the joint controller must serve **identical plans** to the
+link-only controller on every epoch (the nominal-anchored compute bands make
+band 0's representative the exact nominal, so compute adaptivity costs
+nothing until a straggler appears).
+
+Every distinct plan the joint controller cached is executed end-to-end via
+``spatial/partition_apply.run_plan`` (through
+``benchmarks/replan_sweep.verify_plans_lossless``) and checked lossless
+against the single-device forward.
+
+Emits ``BENCH_straggler.json`` (``--out`` to move it, ``--smoke`` for the CI
+artifact run).  Acceptance: ``tests/test_benchmarks.py::
+test_straggler_sweep_acceptance`` pins the joint-vs-link-only margin, the
+no-drift equality, and the losslessness count.  CSV rows
+(``name,us_per_call,derived``) match the other benchmarks' format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    AGX_XAVIER,
+    CollabTopology,
+    GaussMarkovTrace,
+    Link,
+    OffloadChannel,
+    ReplanConfig,
+    ReplanController,
+    StaticPlanner,
+    optimize_static,
+    replay_trace,
+    service_reliability,
+    vgg16_geom,
+)
+
+try:  # either invocation style: `python benchmarks/straggler_sweep.py` or module
+    from benchmarks.replan_sweep import verify_plans_lossless  # noqa: E402
+except ModuleNotFoundError:  # pragma: no cover - direct-script path setup
+    sys.path.insert(0, "benchmarks")
+    from replan_sweep import verify_plans_lossless  # noqa: E402
+
+NET = vgg16_geom()
+DEADLINE_S = 4.0 / 30.0  # 30 FPS with 4 tasks per batch (paper §V.D)
+OFFLOAD_SIGMA_S = 9e-3  # Table III's middle fluctuation level
+N_TASKS = 4
+NOMINAL_BPS = 2.5e9
+NOMINAL_FLOPS = AGX_XAVIER.eff_flops
+
+
+def build_topology() -> CollabTopology:
+    return CollabTopology(
+        host="e0",
+        secondaries=("a", "b"),
+        platforms={"e0": AGX_XAVIER, "a": AGX_XAVIER, "b": AGX_XAVIER},
+        default_link=Link(NOMINAL_BPS),
+    )
+
+
+def build_traces(n_epochs: int, compute_drift: bool) -> tuple[dict, dict, list[float]]:
+    """(link traces, compute traces, offload-rate trace) for one scenario.
+
+    ``compute_drift=False`` freezes b's compute at the nominal (the equality
+    scenario); the link and offload traces are identical either way."""
+    trace_a = GaussMarkovTrace(
+        lo=1.5e9, hi=NOMINAL_BPS, corr=0.9, sigma_frac=0.1, seed=3
+    ).rates(n_epochs)
+    trace_b = GaussMarkovTrace(
+        lo=0.8e9, hi=NOMINAL_BPS, corr=0.9, sigma_frac=0.1, seed=5
+    ).rates(n_epochs)
+    link_rates = {
+        ("e0", "a"): trace_a, ("a", "e0"): trace_a,
+        ("e0", "b"): trace_b, ("b", "e0"): trace_b,
+    }
+    if compute_drift:
+        straggle = GaussMarkovTrace(
+            lo=0.3 * NOMINAL_FLOPS, hi=NOMINAL_FLOPS, mean=0.45 * NOMINAL_FLOPS,
+            corr=0.92, sigma_frac=0.08, start=NOMINAL_FLOPS, seed=7,
+        ).rates(n_epochs)
+    else:
+        straggle = [NOMINAL_FLOPS] * n_epochs
+    compute_rates = {"b": straggle}
+    offload = GaussMarkovTrace(
+        lo=40e6, hi=120e6, corr=0.9, sigma_frac=0.12, seed=11
+    ).rates(n_epochs)
+    return link_rates, compute_rates, offload
+
+
+def _metrics(results: list[dict], offload: list[float]) -> dict:
+    makespans = [r["makespan"] for r in results]
+    rels = [
+        service_reliability(
+            OffloadChannel(rate_bps=offload[i], sigma_s=OFFLOAD_SIGMA_S),
+            makespans[i],
+            DEADLINE_S,
+        )
+        for i in range(len(makespans))
+    ]
+    return dict(
+        mean_makespan=sum(makespans) / len(makespans),
+        max_makespan=max(makespans),
+        mean_reliability=sum(rels) / len(rels),
+        min_reliability=min(rels),
+    )
+
+
+def run_sweep(
+    n_epochs: int = 140,
+    verify: bool = True,
+    max_verify_plans: int | None = None,
+    include_nodrift: bool = True,
+) -> dict:
+    """Run all policies on shared traces; returns per-policy metrics plus the
+    no-drift equality regression."""
+    topo = build_topology()
+    link_rates, compute_rates, offload = build_traces(n_epochs, compute_drift=True)
+    config = ReplanConfig(n_tasks=N_TASKS)
+    link_only_config = ReplanConfig(n_tasks=N_TASKS, adapt_compute=False)
+    out: dict = {"n_epochs": n_epochs}
+
+    static_res = optimize_static(NET, topo, config)
+    static_run = replay_trace(
+        NET, topo, StaticPlanner(static_res.plan),
+        link_rates=link_rates, compute_rates=compute_rates, n_tasks=N_TASKS,
+    )
+    out["static"] = _metrics(static_run, offload)
+
+    link_ctl = ReplanController(NET, topo, link_only_config)
+    link_run = replay_trace(
+        NET, topo, link_ctl,
+        link_rates=link_rates, compute_rates=compute_rates, n_tasks=N_TASKS,
+    )
+    out["link_only"] = _metrics(link_run, offload)
+    out["link_only"].update(
+        optimizer_calls=link_ctl.optimizer_calls, replans=link_ctl.replans
+    )
+
+    joint_ctl = ReplanController(NET, topo, config)
+    joint_run = replay_trace(
+        NET, topo, joint_ctl,
+        link_rates=link_rates, compute_rates=compute_rates, n_tasks=N_TASKS,
+    )
+    out["joint"] = _metrics(joint_run, offload)
+    out["joint"].update(joint_ctl.stats())
+    out["joint_vs_link_only_gain"] = (
+        1.0 - out["joint"]["mean_makespan"] / out["link_only"]["mean_makespan"]
+    )
+
+    if include_nodrift:
+        # equality regression: compute never drifts -> identical plans per epoch
+        nl_links, nl_compute, _ = build_traces(n_epochs, compute_drift=False)
+        a = ReplanController(NET, topo, config)
+        b = ReplanController(NET, topo, link_only_config)
+        run_a = replay_trace(
+            NET, topo, a, link_rates=nl_links, compute_rates=nl_compute,
+            n_tasks=N_TASKS,
+        )
+        run_b = replay_trace(
+            NET, topo, b, link_rates=nl_links, compute_rates=nl_compute,
+            n_tasks=N_TASKS,
+        )
+        out["nodrift_plans_equal"] = all(
+            ra["plan"].parts == rb["plan"].parts for ra, rb in zip(run_a, run_b)
+        )
+        out["nodrift_makespans_equal"] = all(
+            ra["makespan"] == rb["makespan"] for ra, rb in zip(run_a, run_b)
+        )
+        out["nodrift_replans"] = (a.replans, b.replans)
+
+    if verify:
+        out["plans_verified_lossless"] = verify_plans_lossless(
+            joint_ctl, max_plans=max_verify_plans
+        )
+    return out
+
+
+def run_all(smoke: bool = False, out_path: str | None = "BENCH_straggler.json") -> dict:
+    out = run_sweep(
+        n_epochs=40 if smoke else 140,
+        max_verify_plans=3 if smoke else None,
+    )
+    print(
+        f"\n== Straggler sweep: {out['n_epochs']} epochs, secondary b at "
+        f"0.3-1.0x compute (mean 0.45x), links 0.8-2.5 Gbps, deadline "
+        f"{DEADLINE_S*1e3:.1f} ms =="
+    )
+    print(
+        f"{'policy':10s} {'mean T (ms)':>11s} {'max T (ms)':>10s} "
+        f"{'mean rel':>9s} {'min rel':>9s} {'optimizes':>9s}"
+    )
+    for policy in ("static", "link_only", "joint"):
+        m = out[policy]
+        optimizes = m.get("optimizer_calls", 1 if policy == "static" else 0)
+        print(
+            f"{policy:10s} {m['mean_makespan']*1e3:11.2f} {m['max_makespan']*1e3:10.2f} "
+            f"{m['mean_reliability']:9.6f} {m['min_reliability']:9.6f} {optimizes:9d}"
+        )
+        print(
+            f"straggler_{policy},{m['mean_makespan']*1e6:.1f},{m['mean_reliability']:.6f}"
+        )
+    print(
+        f"\njoint beats link-only by {out['joint_vs_link_only_gain']*100:.1f}% "
+        f"mean makespan; joint cache hit rate {out['joint']['cache_hit_rate']:.3f}"
+    )
+    print(f"straggler_joint_gain,,{out['joint_vs_link_only_gain']:.4f}")
+    if "nodrift_plans_equal" in out:
+        print(
+            f"no-drift equality: plans_equal={out['nodrift_plans_equal']} "
+            f"makespans_equal={out['nodrift_makespans_equal']} "
+            f"(joint/link-only replans {out['nodrift_replans']})"
+        )
+    if "plans_verified_lossless" in out:
+        print(
+            f"losslessness: {out['plans_verified_lossless']} distinct joint-"
+            f"controller plans verified bit-compatible via run_plan"
+        )
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True, default=str)
+        print(f"\nwrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="BENCH_straggler.json")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, out_path=args.out)

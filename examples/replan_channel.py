@@ -107,6 +107,8 @@ def model(batch):
 
 channel = OffloadChannel(rate_bps=100e6, sigma_s=1e-3)
 batch0 = plan_aware_batch_size(controller, 4.0 / 30.0, channel, target=0.999, max_batch=8)
+if batch0 == 0:  # admission says shed: no batch meets the deadline target
+    raise SystemExit("admission returned 0 (shed): deadline infeasible on this plan")
 engine = BatchingEngine(
     model, ServeConfig(max_batch=batch0), observer=controller.observe_batch_latency
 )
@@ -132,7 +134,10 @@ for _ in range(replan_cfg.hysteresis + 2):
     controller.observe_transfer("b", "e0", IMAGE_BYTES, 8.0 * IMAGE_BYTES / 30e6)
     controller.step()
 batch1 = plan_aware_batch_size(controller, 4.0 / 30.0, channel, target=0.999, max_batch=8)
-print(f"after measured collapse to 30 Mbps: admitted batch {batch0} -> {batch1}")
+print(
+    f"after measured collapse to 30 Mbps: admitted batch {batch0} -> {batch1}"
+    + (" (0 = shed: nothing meets the deadline now)" if batch1 == 0 else "")
+)
 
 # -- 4. losslessness of the adaptive plan -------------------------------------
 x = jax.random.normal(jax.random.PRNGKey(99), (1, cfg.img_res, cfg.img_res, 3))

@@ -57,6 +57,8 @@ def main():
         max_batch=8,
     )
     print(f"reliability-chosen max_batch = {batch}")
+    if batch == 0:  # admission says shed: no batch meets the deadline target
+        raise SystemExit("admission returned 0 (shed): deadline infeasible")
 
     eng = BatchingEngine(model, ServeConfig(max_batch=batch))
     key = jax.random.PRNGKey(1)

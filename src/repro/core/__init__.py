@@ -2,9 +2,9 @@
 HALP / MoDNN scheduling over arbitrary collaboration topologies (topology,
 schedule), one shared event topology feeding both latency engines (events),
 exact event simulation (simulator), plan-knob search (optimizer), the
-service-reliability model (reliability), online channel-adaptive re-planning
-with a plan cache (replan), and per-task heterogeneous placement over a shared
-ES pool (placement)."""
+service-reliability model (reliability), online joint compute+link adaptive
+re-planning with a plan cache (replan), and per-task heterogeneous placement
+over a shared ES pool (placement)."""
 from .nets import ConvNetGeom, vgg16_geom
 from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
 from .partition import (
@@ -27,12 +27,15 @@ from .placement import (
 )
 from .reliability import OffloadChannel, rate_fluctuation, service_reliability
 from .replan import (
+    ComputeRateEstimator,
     LinkRateEstimator,
     PlanCache,
     ReplanConfig,
     ReplanController,
     StaticPlanner,
     bucket_rate,
+    compute_band_flops,
+    compute_bucket,
     optimize_static,
     rate_bucket,
     topology_fingerprint,
@@ -60,6 +63,7 @@ from .simulator import (
     Sim,
     enhanced_modnn_delay,
     replay_rate_trace,
+    replay_trace,
     simulate_halp,
     simulate_modnn,
 )

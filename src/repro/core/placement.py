@@ -34,9 +34,11 @@ per-link conditions instead.  This module does that end to end:
   same equal-split plan geometry (no capacity awareness anywhere).
 
 * :class:`PlacementController` -- the online loop: the
-  :class:`~repro.core.replan.ReplanController` machinery (EWMA link-rate
-  estimates -> quantised buckets -> hysteresis -> cache), but a bucket switch
-  re-*places* every task instead of re-optimising one shared plan.
+  :class:`~repro.core.replan.ReplanController` machinery (EWMA link-rate AND
+  per-ES compute-rate estimates -> quantised buckets -> shared hysteresis ->
+  cache), but a bucket switch -- whether a link band or a straggling ES's
+  compute band moved -- re-*places* every task instead of re-optimising one
+  shared plan.
   ``predicted_latency`` prices a batch by tiling the active placement's plans
   over the batch's tasks and simulating them on the shared pool, so
   :func:`~repro.runtime.serve.plan_aware_batch_size` admits batches against
@@ -482,12 +484,16 @@ class PlacementController(ReplanController):
     all tasks over the pool instead of re-optimising one shared plan.
 
     Inherits the full :class:`~repro.core.replan.ReplanController` loop --
-    EWMA per-link estimates over the pool's 2M host<->secondary links,
-    geometric rate buckets, hysteresis, LRU cache (namespaced via
+    EWMA per-link estimates over the pool's 2M host<->secondary links, EWMA
+    per-ES compute estimates over all M+1 ESs (``observe_compute``),
+    geometric rate buckets with shared hysteresis, LRU cache (namespaced via
     ``_cache_kind`` so both controller kinds can share a cache), telemetry --
     and swaps only the recompute step: a cache miss runs
     :func:`place_tasks` for ``config.n_tasks`` tasks against the
-    bucket-representative rates.
+    bucket-representative rates and platforms.  A straggling ES therefore
+    changes the *assignment* itself (capacity ranking, LPT balance, and the
+    swap search all read the rebuilt ``eff_flops``), not just the row split
+    within fixed groups.
 
     Serving integration: ``predicted_latency(b)`` tiles the active
     placement's plans over ``b`` tasks and runs the shared-pool DES -- tasks

@@ -1,11 +1,14 @@
-"""Online channel-adaptive re-planning: estimate, bucket, cache, re-optimise.
+"""Online joint compute+link adaptive re-planning: estimate, bucket, cache,
+re-optimise.
 
 The paper's §V.D evaluates HALP under a *time-variant* offloading channel but
 still runs one plan chosen offline against nominal rates; DistrEdge
 (arXiv 2202.01699) and the authors' own prototype (arXiv 2211.13778) show the
-remaining latency on real testbeds comes from exactly that gap -- measured link
-rates drift away from the nominals the partition was optimised for.  This
-module closes the loop online, in three layers:
+remaining latency on real testbeds comes from exactly that gap -- measured
+link rates AND measured per-device compute rates both drift away from the
+nominals the partition was optimised for (a straggling secondary stretches
+every makespan just like a collapsed link).  This module closes the loop
+online, in three layers:
 
 * :class:`LinkRateEstimator` -- an EWMA over observed per-link transfer times
   ``rate_sample = 8 * nbytes / elapsed``, seeded from the
@@ -13,30 +16,50 @@ module closes the loop online, in three layers:
   directed host<->secondary pair (secondaries never talk directly, so 2N
   links suffice; any other measured pair -- e.g. the IoT offload uplink of an
   :class:`~repro.core.reliability.OffloadChannel` -- can be folded in through
-  the same ``observe``).
+  the same ``observe``).  Its compute-side mirror is
+  :class:`ComputeRateEstimator`: an EWMA over observed per-ES execution
+  times ``rate_sample = flops / elapsed``, seeded from each
+  :class:`~repro.core.topology.Platform`'s calibrated ``eff_flops`` and fed
+  by the runtime's straggler stats (``runtime.fault``) and the serving
+  engine's per-ES timing hook (``runtime.serve``).
 
 * :class:`PlanCache` -- an LRU map from **(topology fingerprint + optimiser
   config, quantised rate buckets)** to the
   :class:`~repro.core.optimizer.OptimizeResult`
-  for that operating point.  Rates are quantised into geometric bands of width
-  ``bucket_frac`` (30% by default): every rate inside a band maps to the same
-  key, and the plan is optimised against the band's *representative* (geometric
-  centre) rate, so cache entries are reproducible regardless of which measured
-  rate first filled them.  In steady state -- a mean-reverting channel
-  revisiting a handful of bands -- every plan request is an O(1) dict hit.
+  for that operating point.  Link rates are quantised into geometric bands of
+  width ``bucket_frac`` (30% by default): every rate inside a band maps to the
+  same key, and the plan is optimised against the band's *representative*
+  (geometric centre) rate, so cache entries are reproducible regardless of
+  which measured rate first filled them.  Compute rates are quantised into
+  geometric bands **anchored at each ES's nominal** (:func:`compute_bucket`):
+  band 0's representative is *exactly* the calibrated ``eff_flops``, so a
+  controller whose compute never drifts optimises against the nominal
+  platforms and serves plans identical to the link-only controller's --
+  compute adaptivity is free until a straggler actually appears.  The
+  per-ES ``eff_flops`` therefore lives in the bucketed key space (as the
+  band anchor), NOT in :func:`topology_fingerprint`: revisited compute
+  operating points amortise through the cache exactly like revisited channel
+  bands.  In steady state -- mean-reverting conditions revisiting a handful
+  of bands -- every plan request is an O(1) dict hit.
 
 * :class:`ReplanController` -- the policy.  Each control epoch it re-buckets
-  the current estimates and applies **hysteresis**: the estimates must sit
-  outside the active bands for ``hysteresis`` consecutive epochs before the
-  latest bucket key becomes active (a single-epoch rate excursion therefore
-  cannot thrash the plan, at the cost of reacting ``hysteresis - 1`` epochs
-  late; a steadily drifting channel is not starved).  Only when the active key
-  changes does the controller consult the cache, and only on a cache miss does
-  it rebuild the :class:`CollabTopology` with the band-representative rates
-  and invoke :func:`~repro.core.optimizer.optimize_plan`.  Setting
+  the current estimates (link and compute jointly) and applies a **shared
+  hysteresis**: the estimates must sit outside the active bands -- on any
+  link or any ES -- for ``hysteresis`` consecutive epochs before the latest
+  bucket key becomes active (a single-epoch excursion therefore cannot
+  thrash the plan, at the cost of reacting ``hysteresis - 1`` epochs late; a
+  steadily drifting condition is not starved).  Only when the active key
+  changes does the controller consult the cache, and only on a cache miss
+  does it rebuild the :class:`CollabTopology` with the band-representative
+  link rates (:meth:`~repro.core.topology.CollabTopology.with_links`) and
+  platforms (:meth:`~repro.core.topology.CollabTopology.with_platforms`) and
+  invoke :func:`~repro.core.optimizer.optimize_plan`.  Setting
   ``bucket_frac=0`` keys on the exact estimates (every drift is a miss): that
   degenerate configuration is the "always re-plan" upper-baseline used by
-  ``benchmarks/replan_sweep.py``.
+  ``benchmarks/replan_sweep.py``; ``ReplanConfig(adapt_compute=False)`` keeps
+  the PR-2 link-only behaviour (compute estimates frozen at the nominals) --
+  the baseline ``benchmarks/straggler_sweep.py`` measures joint adaptation
+  against.
 
 The re-optimisation objective defaults to the discrete-event simulator (the
 repo's ground truth); ``ReplanConfig(use_simulator=False)`` switches to the
@@ -51,6 +74,7 @@ plan's predicted makespan into ``choose_batch_size``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -64,6 +88,7 @@ from .topology import CollabTopology, Link
 
 __all__ = [
     "LinkRateEstimator",
+    "ComputeRateEstimator",
     "PlanCache",
     "ReplanConfig",
     "ReplanController",
@@ -72,6 +97,8 @@ __all__ = [
     "topology_fingerprint",
     "rate_bucket",
     "bucket_rate",
+    "compute_bucket",
+    "compute_band_flops",
 ]
 
 # Reference rate for the geometric bucket grid.  Any positive constant works
@@ -103,17 +130,71 @@ def bucket_rate(bucket: float, bucket_frac: float) -> float:
     return BUCKET_REF_BPS * (1.0 + bucket_frac) ** (bucket + 0.5)
 
 
+def compute_bucket(rate_flops: float, nominal_flops: float, bucket_frac: float) -> float:
+    """Quantise an effective-compute estimate into a geometric band of width
+    ``bucket_frac``, anchored at the ES's calibrated nominal.
+
+    Band ``i`` is centred on ``nominal * (1+f)^i`` (round-to-nearest in log
+    space), so band 0 covers ``nominal * (1+f)^(-1/2) .. nominal * (1+f)^(1/2)``
+    and -- unlike the floor-based link grid of :func:`rate_bucket` -- the
+    *seed estimate itself sits exactly on its band's representative*.  A
+    controller whose compute never drifts therefore optimises against the
+    nominal ``eff_flops`` bit-for-bit, preserving plan equality with the
+    link-only path; see :func:`compute_band_flops`.  ``bucket_frac <= 0``
+    disables quantisation and returns the exact estimate (the always-replan
+    degenerate keying)."""
+    if rate_flops <= 0 or nominal_flops <= 0:
+        raise ValueError(f"need positive rates, got {rate_flops}, {nominal_flops}")
+    if bucket_frac <= 0:
+        return rate_flops
+    return round(math.log(rate_flops / nominal_flops) / math.log1p(bucket_frac))
+
+
+def compute_band_flops(bucket: float, nominal_flops: float, bucket_frac: float) -> float:
+    """The compute band's representative effective FLOP/s -- what plans are
+    optimised against.  Band 0 maps back to the nominal *exactly* (not merely
+    within the band), which is what keeps an undrifted joint controller
+    bit-identical to the link-only controller."""
+    if bucket_frac <= 0:
+        return bucket  # exact keying: the "bucket" is the estimate itself
+    return nominal_flops * (1.0 + bucket_frac) ** bucket
+
+
 def topology_fingerprint(topology: CollabTopology) -> tuple:
     """Hashable identity of everything the optimum depends on *except* rates:
-    host/secondary names in order and per-ES effective compute."""
-    return (
-        topology.host,
-        topology.secondaries,
-        tuple((es, topology.platform_of(es).eff_flops) for es in topology.es_names),
-    )
+    the host/secondary names in order.
+
+    Per-ES effective compute is deliberately NOT part of the fingerprint
+    anymore: like link rates, ``eff_flops`` is an online-estimated quantity
+    and lives in the bucketed key space (as each ES's band anchor plus band
+    index -- see :func:`compute_bucket`), so the :class:`PlanCache` amortises
+    across revisited compute operating points instead of pinning one compute
+    level per cluster."""
+    return (topology.host, topology.secondaries)
 
 
-class LinkRateEstimator:
+class _EwmaRateEstimator:
+    """Shared EWMA machinery of the link/compute estimators: a dict of rate
+    estimates seeded from nominals, each observation folding ``alpha`` of the
+    way toward the new sample."""
+
+    def __init__(self, nominal: Mapping, alpha: float = 0.4):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._rates = dict(nominal)
+
+    def _fold(self, key, sample: float) -> float:
+        prev = self._rates.get(key)
+        est = sample if prev is None else (1.0 - self.alpha) * prev + self.alpha * sample
+        self._rates[key] = est
+        return est
+
+    def rates(self) -> dict:
+        return dict(self._rates)
+
+
+class LinkRateEstimator(_EwmaRateEstimator):
     """EWMA per-link rate estimates from observed transfer times.
 
     Each observation ``(src, dst, nbytes, elapsed_s)`` yields a rate sample
@@ -122,12 +203,6 @@ class LinkRateEstimator:
     controller optimises for the nominal rates' *bands* (representative rates
     within ``bucket_frac`` of the nominals -- close to, but not necessarily
     identical with, the offline nominal-rate plan)."""
-
-    def __init__(self, nominal_bps: Mapping[tuple[str, str], float], alpha: float = 0.4):
-        if not 0.0 < alpha <= 1.0:
-            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
-        self.alpha = alpha
-        self._rates = dict(nominal_bps)
 
     @classmethod
     def from_topology(cls, topology: CollabTopology, alpha: float = 0.4) -> "LinkRateEstimator":
@@ -141,17 +216,42 @@ class LinkRateEstimator:
         """Fold one observed transfer in; returns the updated estimate."""
         if nbytes <= 0 or elapsed_s <= 0:
             raise ValueError(f"need positive bytes/elapsed, got {nbytes}, {elapsed_s}")
-        sample = 8.0 * nbytes / elapsed_s
-        prev = self._rates.get((src, dst))
-        est = sample if prev is None else (1.0 - self.alpha) * prev + self.alpha * sample
-        self._rates[(src, dst)] = est
-        return est
+        return self._fold((src, dst), 8.0 * nbytes / elapsed_s)
 
     def rate(self, src: str, dst: str) -> float:
         return self._rates[(src, dst)]
 
-    def rates(self) -> dict[tuple[str, str], float]:
-        return dict(self._rates)
+
+class ComputeRateEstimator(_EwmaRateEstimator):
+    """EWMA per-ES effective-compute estimates from observed execution times.
+
+    The compute-side mirror of :class:`LinkRateEstimator`: each observation
+    ``(es, flops, elapsed_s)`` -- one timed compute chunk of known FLOP count
+    on one ES -- yields a rate sample ``flops / elapsed_s`` (effective
+    FLOP/s) and moves that ES's estimate ``alpha`` of the way toward it.
+    Estimates are seeded from each :class:`~repro.core.topology.Platform`'s
+    calibrated ``eff_flops`` (host and secondaries alike), so an ES that is
+    never measured keeps behaving like its nominal.  Feeders: the runtime's
+    straggler tracking (:class:`~repro.runtime.fault.FaultTolerantTrainer`'s
+    ``compute_observer`` hook) and the serving engine's per-ES timing hook
+    (:meth:`~repro.runtime.serve.BatchingEngine.observe_es_time`)."""
+
+    @classmethod
+    def from_topology(cls, topology: CollabTopology, alpha: float = 0.4) -> "ComputeRateEstimator":
+        """Seed one estimate per ES (host included) from the platform nominals."""
+        return cls(
+            {es: topology.platform_of(es).eff_flops for es in topology.es_names},
+            alpha=alpha,
+        )
+
+    def observe(self, es: str, flops: float, elapsed_s: float) -> float:
+        """Fold one observed execution in; returns the updated estimate."""
+        if flops <= 0 or elapsed_s <= 0:
+            raise ValueError(f"need positive flops/elapsed, got {flops}, {elapsed_s}")
+        return self._fold(es, flops / elapsed_s)
+
+    def rate(self, es: str) -> float:
+        return self._rates[es]
 
 
 class PlanCache:
@@ -215,8 +315,17 @@ class ReplanConfig:
 
     bucket_frac: float = 0.3  # geometric band width; <= 0 keys on exact rates
     hysteresis: int = 2  # consecutive epochs outside the active bands to adopt
-    alpha: float = 0.4  # EWMA weight of the rate estimator
+    alpha: float = 0.4  # EWMA weight of the rate estimators (link and compute)
     n_tasks: int = 4  # concurrent tasks the plan is optimised for
+    # Joint compute+link adaptation.  False freezes the compute estimates at
+    # the platform nominals (the PR-2 link-only controller, kept as the
+    # baseline benchmarks/straggler_sweep.py measures joint adaptation
+    # against): observe_compute becomes a no-op, so compute buckets never
+    # switch and only channel drift triggers re-planning.  This knob is NOT
+    # part of the cache fingerprint: it only gates whether keys *move*, never
+    # what plan a given key maps to, so adaptive and frozen controllers can
+    # share cache entries by design.
+    adapt_compute: bool = True
     overlap_choices: tuple[int, ...] = (2, 4, 6, 8)
     max_rounds: int = 6  # coordinate-descent budget per re-optimisation
     # Candidate-pricing engine for cache-miss re-optimisations.  "batched"
@@ -284,7 +393,8 @@ def optimize_static(
 
 class StaticPlanner:
     """Planner-protocol wrapper around one fixed plan (the paper's baseline):
-    ignores all observations, serves the same plan every epoch."""
+    ignores all observations (link and compute), serves the same plan every
+    epoch."""
 
     def __init__(self, plan: HALPPlan):
         self._plan = plan
@@ -292,17 +402,20 @@ class StaticPlanner:
     def observe_transfer(self, src: str, dst: str, nbytes: float, elapsed_s: float) -> None:
         pass
 
+    def observe_compute(self, es: str, flops: float, elapsed_s: float) -> None:
+        pass
+
     def plan_for_epoch(self) -> HALPPlan:
         return self._plan
 
 
 class ReplanController:
-    """Channel-adaptive planner: EWMA estimates -> buckets -> hysteresis ->
-    cached :func:`optimize_plan`.
+    """Joint compute+link adaptive planner: EWMA estimates -> buckets ->
+    shared hysteresis -> cached :func:`optimize_plan`.
 
     Implements the same planner protocol as :class:`StaticPlanner`
-    (``observe_transfer`` + ``plan_for_epoch``), so
-    :func:`~repro.core.simulator.replay_rate_trace` and the serving loop drive
+    (``observe_transfer`` + ``observe_compute`` + ``plan_for_epoch``), so
+    :func:`~repro.core.simulator.replay_trace` and the serving loop drive
     either interchangeably.
 
     Subclasses may override :meth:`_optimize` to swap what is recomputed on a
@@ -326,10 +439,20 @@ class ReplanController:
         self.config = config
         self.cache = cache if cache is not None else PlanCache()
         self.estimator = LinkRateEstimator.from_topology(topology, alpha=config.alpha)
+        self.compute_estimator = ComputeRateEstimator.from_topology(
+            topology, alpha=config.alpha
+        )
+        # per-ES band anchors of the compute grid (the calibrated nominals)
+        self._nominal_flops = {
+            es: topology.platform_of(es).eff_flops for es in topology.es_names
+        }
         # identity of everything a cached optimum depends on besides the rate
         # buckets: the cluster and every optimiser-facing config knob (bucket
         # indices are grid-relative, so bucket_frac in particular must key) --
-        # controllers with different configs can then share one PlanCache
+        # controllers with different configs can then share one PlanCache.
+        # eff_flops is NOT here: it keys through the compute part of the
+        # bucket key (anchor + band index), and adapt_compute only gates
+        # whether keys move, never what a key maps to.
         self._fingerprint = (
             self._cache_kind,
             topology_fingerprint(topology),
@@ -355,23 +478,60 @@ class ReplanController:
     # -- bucketing ------------------------------------------------------------
 
     def _bucket_key(self) -> tuple:
+        """The joint operating point: quantised link bands + quantised compute
+        bands.  The compute part carries each ES's band *anchor* (its nominal
+        ``eff_flops``) alongside the band index, so the key alone determines
+        the representative platform -- controllers over different-speed
+        clusters can share one cache without colliding."""
         f = self.config.bucket_frac
-        return tuple(
+        links = tuple(
             sorted((pair, rate_bucket(r, f)) for pair, r in self.estimator.rates().items())
         )
+        noms = self._nominal_flops
+        compute = tuple(
+            sorted(
+                (es, noms[es], compute_bucket(r, noms[es], f))
+                for es, r in self.compute_estimator.rates().items()
+            )
+        )
+        return (links, compute)
 
     def estimated_topology(self) -> CollabTopology:
-        """The nominal topology rebuilt with the active buckets' representative
-        rates -- what plans are optimised against."""
+        """The nominal topology rebuilt with the active bands' representative
+        link rates and per-ES platforms -- what plans are optimised against.
+        Undrifted ESs sit in compute band 0, whose representative is exactly
+        the nominal ``eff_flops`` (see :func:`compute_bucket`)."""
         f = self.config.bucket_frac
-        links = {pair: Link(bucket_rate(b, f)) for pair, b in self._active}
-        return self.nominal.with_links(links)
+        link_part, compute_part = self._active
+        links = {pair: Link(bucket_rate(b, f)) for pair, b in link_part}
+        platforms = {
+            es: dataclasses.replace(
+                self.nominal.platform_of(es),
+                eff_flops=compute_band_flops(b, nom, f),
+            )
+            for es, nom, b in compute_part
+        }
+        return self.nominal.with_links(links).with_platforms(platforms)
 
     # -- planner protocol -----------------------------------------------------
 
     def observe_transfer(self, src: str, dst: str, nbytes: float, elapsed_s: float) -> float:
-        """Feed one observed transfer into the rate estimator."""
+        """Feed one observed transfer into the link-rate estimator."""
         return self.estimator.observe(src, dst, nbytes, elapsed_s)
+
+    def observe_compute(self, es: str, flops: float, elapsed_s: float) -> float:
+        """Feed one observed per-ES execution (a timed compute chunk of known
+        FLOP count) into the compute-rate estimator.  With
+        ``config.adapt_compute=False`` the sample is dropped (estimates stay
+        at the nominals -- the link-only baseline), but the arguments are
+        still validated so mis-wired feeders fail loudly either way."""
+        if es not in self._nominal_flops:
+            raise ValueError(f"{es!r} is not an ES of this controller's topology")
+        if not self.config.adapt_compute:
+            if flops <= 0 or elapsed_s <= 0:
+                raise ValueError(f"need positive flops/elapsed, got {flops}, {elapsed_s}")
+            return self.compute_estimator.rate(es)
+        return self.compute_estimator.observe(es, flops, elapsed_s)
 
     def step(self) -> bool:
         """Advance one control epoch; returns True iff the active bucket key

@@ -40,6 +40,7 @@ __all__ = [
     "simulate_modnn",
     "enhanced_modnn_delay",
     "GaussMarkovTrace",
+    "replay_trace",
     "replay_rate_trace",
 ]
 
@@ -333,7 +334,13 @@ class GaussMarkovTrace:
     adds Gaussian innovation, clipped to [lo, hi].  ``corr=0`` is i.i.d.
     sampling; ``corr=1`` removes the mean reversion (a clipped random walk --
     combine with ``sigma_frac=0`` to freeze the channel).  Deterministic given
-    ``seed`` -- every policy in a comparison replays the identical channel."""
+    ``seed`` -- every policy in a comparison replays the identical trace.
+
+    The process is agnostic to what the rate measures: link traces are in
+    bits/s, and the same class models per-ES *compute* drift (effective
+    FLOP/s of a thermally-throttled or co-loaded straggler ES -- the DistrEdge
+    / arXiv 2211.13778 testbed observation) for :func:`replay_trace`'s
+    ``compute_rates``."""
 
     lo: float
     hi: float
@@ -363,37 +370,80 @@ class GaussMarkovTrace:
         return out
 
 
-def replay_rate_trace(
+def _compute_slowdown(
+    topology: CollabTopology, true_flops: Mapping[str, float], n_tasks: int
+) -> dict[str, float]:
+    """Per-resource slowdown factors realising true per-ES compute rates.
+
+    The DES prices compute jobs from the topology's *nominal* ``eff_flops``;
+    an ES whose true effective rate is ``r`` therefore runs every one of its
+    jobs ``nominal / r`` times slower.  Host jobs run on the host ES name;
+    secondary jobs run on the per-task clone resources ``{es}^{t}`` laid by
+    :func:`~repro.core.events.build_halp_dag`, so the factor is applied to
+    all ``n_tasks`` clones of a straggling secondary."""
+    slow: dict[str, float] = {}
+    for es, rate in true_flops.items():
+        if es not in topology.platforms:
+            raise ValueError(f"compute trace names {es!r}, not an ES of the topology")
+        if rate <= 0:
+            raise ValueError(f"compute rate for {es!r} must be positive, got {rate}")
+        factor = topology.platform_of(es).eff_flops / rate
+        if es == topology.host:
+            slow[es] = factor
+        else:
+            for t in range(n_tasks):
+                slow[f"{es}^{t}"] = factor
+    return slow
+
+
+def replay_trace(
     net: ConvNetGeom,
     topology: CollabTopology,
     planner,
-    link_rates: Mapping[tuple[str, str], Sequence[float]],
+    link_rates: Mapping[tuple[str, str], Sequence[float]] | None = None,
+    compute_rates: Mapping[str, Sequence[float]] | None = None,
     n_epochs: int | None = None,
     n_tasks: int = 4,
-    probe_bytes: float = float(IMAGE_BYTES),  # one image per rate probe
+    probe_bytes: float = float(IMAGE_BYTES),  # one image per link probe
+    probe_flops: float = 1e9,  # one timed chunk per compute probe
 ) -> list[dict]:
-    """Replay a time-variant channel through the DES, one plan per epoch.
+    """Replay time-variant conditions through the DES, one plan per epoch.
 
-    ``link_rates`` maps directed ES pairs to per-epoch true rates (e.g.
-    :meth:`GaussMarkovTrace.rates`); pairs not listed stay at ``topology``'s
-    nominal rate.  Per epoch the driver (a) asks ``planner`` for a plan -- the
-    planner only ever sees *past* observations, so adaptive policies react
-    with a one-epoch lag, exactly like a real serving loop, -- (b) simulates
-    the makespan under the epoch's **true** rates (plans are geometry-only,
-    so a stale plan is merely slow, never wrong), and (c) feeds one observed
-    ``probe_bytes`` transfer per traced link back to the planner.
+    ``link_rates`` maps directed ES pairs to per-epoch true link rates and
+    ``compute_rates`` maps ES names to per-epoch true effective FLOP/s (e.g.
+    :meth:`GaussMarkovTrace.rates` for either); anything not listed stays at
+    ``topology``'s nominal.  Per epoch the driver (a) asks ``planner`` for a
+    plan -- the planner only ever sees *past* observations, so adaptive
+    policies react with a one-epoch lag, exactly like a real serving loop --
+    (b) simulates the makespan under the epoch's **true** rates: true link
+    rates rebuild the topology's links, true compute rates map onto the DES
+    through per-resource :attr:`Sim.slowdown` factors
+    (``nominal_eff / true_eff`` on the ES's compute resources -- the same
+    injection path the straggler/fault harness uses), and plans are
+    geometry-only, so a stale plan is merely slow, never wrong -- and (c)
+    feeds one observed ``probe_bytes`` transfer per traced link and one timed
+    ``probe_flops`` execution per traced ES back to the planner.
 
     ``planner`` implements the replan protocol (``plan_for_epoch()`` +
-    ``observe_transfer(src, dst, nbytes, elapsed_s)``):
+    ``observe_transfer(src, dst, nbytes, elapsed_s)`` + -- when compute is
+    traced -- ``observe_compute(es, flops, elapsed_s)``):
     :class:`~repro.core.replan.StaticPlanner` for the paper's offline
     baseline, :class:`~repro.core.replan.ReplanController` for the adaptive
-    policies.  Returns one record per epoch with the true rates, the simulated
-    makespan, the plan served, and -- for planners exposing ``stats()`` -- a
-    snapshot of the planner's counters *after* serving the epoch (so cache
-    hit rates over any window can be recovered from the records)."""
-    if not link_rates:
-        raise ValueError("link_rates must map at least one directed pair to a trace")
-    max_epochs = min(len(trace) for trace in link_rates.values())
+    policies (link-only via ``ReplanConfig(adapt_compute=False)``, joint by
+    default).  Returns one record per epoch with the true rates (``rates``
+    for links, ``compute_rates`` per ES), the simulated makespan, the plan
+    served, and -- for planners exposing ``stats()`` -- a snapshot of the
+    planner's counters *after* serving the epoch (so cache hit rates over
+    any window can be recovered from the records)."""
+    link_rates = dict(link_rates or {})
+    compute_rates = dict(compute_rates or {})
+    if not link_rates and not compute_rates:
+        raise ValueError(
+            "need at least one trace: link_rates (directed pair -> rates) "
+            "and/or compute_rates (ES -> effective FLOP/s)"
+        )
+    all_traces = list(link_rates.values()) + list(compute_rates.values())
+    max_epochs = min(len(trace) for trace in all_traces)
     if n_epochs is None:
         n_epochs = max_epochs
     elif n_epochs > max_epochs:
@@ -405,15 +455,48 @@ def replay_rate_trace(
     for epoch in range(n_epochs):
         plan = planner.plan_for_epoch()
         rates = {pair: trace[epoch] for pair, trace in link_rates.items()}
+        flops_now = {es: trace[epoch] for es, trace in compute_rates.items()}
         true_topology = topology.with_links({p: Link(r) for p, r in rates.items()})
-        sim = simulate_halp(net, topology=true_topology, n_tasks=n_tasks, plan=plan)
+        sim = simulate_halp(
+            net,
+            topology=true_topology,
+            n_tasks=n_tasks,
+            plan=plan,
+            slowdown=_compute_slowdown(topology, flops_now, n_tasks) or None,
+        )
         for (src, dst), rate in rates.items():
             planner.observe_transfer(src, dst, probe_bytes, 8.0 * probe_bytes / rate)
-        record = dict(epoch=epoch, rates=rates, makespan=sim["total"], plan=plan)
+        for es, rate in flops_now.items():
+            planner.observe_compute(es, probe_flops, probe_flops / rate)
+        record = dict(
+            epoch=epoch, rates=rates, compute_rates=flops_now,
+            makespan=sim["total"], plan=plan,
+        )
         if hasattr(planner, "stats"):
             record["planner_stats"] = planner.stats()
         results.append(record)
     return results
+
+
+def replay_rate_trace(
+    net: ConvNetGeom,
+    topology: CollabTopology,
+    planner,
+    link_rates: Mapping[tuple[str, str], Sequence[float]],
+    n_epochs: int | None = None,
+    n_tasks: int = 4,
+    probe_bytes: float = float(IMAGE_BYTES),
+) -> list[dict]:
+    """Link-only replay (superseded by :func:`replay_trace`, kept as the
+    established entry point): equivalent to ``replay_trace`` with no compute
+    traces, so compute stays at the nominals throughout."""
+    if not link_rates:
+        raise ValueError("link_rates must map at least one directed pair to a trace")
+    return replay_trace(
+        net, topology, planner,
+        link_rates=link_rates, n_epochs=n_epochs, n_tasks=n_tasks,
+        probe_bytes=probe_bytes,
+    )
 
 
 def enhanced_modnn_delay(

@@ -150,6 +150,22 @@ class CollabTopology:
             self, links=merged, default_link=default_link or self.default_link
         )
 
+    def with_platforms(self, platforms: Mapping[str, Platform]) -> "CollabTopology":
+        """A copy with some ES platforms replaced (same names/links).
+
+        The compute-side mirror of :meth:`with_links`: the measured-compute
+        rebuild used by the online re-planner when per-ES effective FLOP/s
+        drift away from the calibrated nominals (a straggling secondary).
+        ESs not in ``platforms`` keep their current platform; naming an ES
+        the topology does not have raises (a typo would otherwise silently
+        leave the straggler unmodelled)."""
+        merged = dict(self.platforms)
+        for es, plat in platforms.items():
+            if es not in merged:
+                raise ValueError(f"{es!r} is not an ES of this topology")
+            merged[es] = plat
+        return dataclasses.replace(self, platforms=merged)
+
     @staticmethod
     def symmetric(
         platform: Platform,

@@ -7,7 +7,11 @@ Design for 1000+ nodes (DESIGN.md):
   (device error, injected fault) triggers restore-and-continue with bounded
   retries.
 * **straggler mitigation** -- per-step wall-times feed an EMA; steps slower
-  than ``straggler_factor`` x EMA are counted and surfaced.  At scale the
+  than ``straggler_factor`` x EMA are counted and surfaced, and (when wired)
+  each newly completed step's timing feeds a ``compute_observer`` -- the
+  per-ES compute-rate estimate of the online planner
+  (``core.replan.ComputeRateEstimator``), so a straggling node triggers a
+  joint re-plan instead of silently stretching every makespan.  At scale the
   launcher uses this signal to evict/replace slow hosts; the analytical twin
   (core.simulator slowdown injection + core.reliability deadlines) quantifies
   the effect on service deadlines, exactly as the paper does for time-variant
@@ -58,15 +62,33 @@ class FaultTolerantTrainer:
     """Wraps a jitted train step with checkpoint/restart + straggler stats.
 
     ``step_fn(state, **batch) -> (state, metrics)``; ``stream.batch_at(i)``
-    must be deterministic in ``i`` (repro.data guarantees this)."""
+    must be deterministic in ``i`` (repro.data guarantees this).
+
+    ``compute_observer`` closes the loop to the online planner: when set
+    (together with ``step_flops``, the known FLOP count of one step), every
+    *newly completed* step's wall-time is reported as
+    ``compute_observer(es_name, step_flops, dt)`` -- wire
+    ``ReplanController.observe_compute`` (or a bare
+    :class:`~repro.core.replan.ComputeRateEstimator`'s ``observe``) here so
+    this node straggling moves the planner's per-ES compute estimate.
+    Replayed steps after a checkpoint restore are deduplicated by step index
+    before reaching the stats *or* the observer, so a fault cannot double-feed
+    either."""
 
     def __init__(self, step_fn: Callable, stream, cfg: FaultConfig,
-                 fault_hook: Callable[[int], None] | None = None):
+                 fault_hook: Callable[[int], None] | None = None,
+                 compute_observer: Callable[[str, float, float], None] | None = None,
+                 es_name: str = "host",
+                 step_flops: float | None = None):
         self.step_fn = step_fn
         self.stream = stream
         self.cfg = cfg
         self.fault_hook = fault_hook
+        self.compute_observer = compute_observer
+        self.es_name = es_name
+        self.step_flops = step_flops
         self.stats = TrainerStats()
+        self._tracked_upto = 0  # stats watermark: first step index not yet counted
 
     def _maybe_restore(self, state):
         step = latest_step(self.cfg.ckpt_dir)
@@ -79,8 +101,19 @@ class FaultTolerantTrainer:
     def run(self, state, n_steps: int, start_step: int = 0, resume: bool = True):
         if resume:
             state, start_step = self._maybe_restore(state)
+        # steps below the run's start are genuinely re-executed (e.g. a fresh
+        # resume=False run on a reused trainer), not replayed -- lower the
+        # stats watermark so they count; within-run replays stay deduped
+        self._tracked_upto = min(self._tracked_upto, start_step)
+        # Snapshot the entry state (jax pytrees are immutable, so holding the
+        # reference is a true snapshot): recovering from a fault *before the
+        # first checkpoint exists* must rewind the state together with the
+        # step index -- rewinding only ``i`` would re-apply already-consumed
+        # batches to an already-advanced state, silently corrupting the run.
+        entry_state = state
         i = start_step
-        failures = 0
+        high_water = start_step  # furthest step ever completed this run
+        consecutive_failures = 0
         while i < n_steps:
             try:
                 if self.fault_hook is not None:
@@ -90,26 +123,49 @@ class FaultTolerantTrainer:
                 state, metrics = self.step_fn(state, **batch)
                 jax.block_until_ready(metrics)
                 dt = time.time() - t0
-                self._track(dt, metrics)
+                self._track(i, dt, metrics)
                 i += 1
+                # NEW progress (not a replayed step) refills the retry budget:
+                # the bounded-retries contract is about *consecutive
+                # unrecovered* failures, so a long run with sparse transient
+                # faults never trips it (stats.failures still counts all),
+                # while a step that faults on every attempt still exhausts the
+                # budget -- its replays never pass the old high-water mark.
+                if i > high_water:
+                    high_water = i
+                    consecutive_failures = 0
                 if i % self.cfg.ckpt_every == 0 or i == n_steps:
                     save_checkpoint(self.cfg.ckpt_dir, i, state)
             except (InjectedFault, RuntimeError) as e:
-                failures += 1
+                consecutive_failures += 1
                 self.stats.failures += 1
-                if failures > self.cfg.max_failures:
+                if consecutive_failures > self.cfg.max_failures:
                     raise RuntimeError(
-                        f"exceeded {self.cfg.max_failures} failures; last: {e}"
+                        f"exceeded {self.cfg.max_failures} consecutive "
+                        f"failures; last: {e}"
                     ) from e
-                # restore from the newest complete checkpoint and replay
+                # restore from the newest complete checkpoint and replay --
+                # but only a checkpoint *this run* could have produced
+                # (within [start_step, high_water]): a stale checkpoint from
+                # an earlier run on the same dir would jump a fresh
+                # resume=False run to foreign state/progress.  Otherwise
+                # replay from the entry state (state and index rewind
+                # together).
                 step = latest_step(self.cfg.ckpt_dir)
-                if step is not None:
+                if step is not None and start_step <= step <= high_water:
                     state, i = self._maybe_restore(state)[0], step
                 else:
-                    i = start_step
+                    state, i = entry_state, start_step
         return state, self.stats
 
-    def _track(self, dt: float, metrics):
+    def _track(self, step: int, dt: float, metrics):
+        # Steps replayed after a checkpoint restore re-run below the
+        # watermark: they already fed steps/losses/EMA (and the compute
+        # observer) once, so counting them again would double-feed every
+        # stat for every replayed step.
+        if step < self._tracked_upto:
+            return
+        self._tracked_upto = step + 1
         s = self.stats
         if s.ema_step_s == 0.0:
             s.ema_step_s = dt
@@ -120,3 +176,5 @@ class FaultTolerantTrainer:
         loss = metrics.get("total", metrics.get("loss", metrics.get("ce")))
         if loss is not None:
             s.losses.append(float(loss))
+        if self.compute_observer is not None and self.step_flops:
+            self.compute_observer(self.es_name, self.step_flops, dt)

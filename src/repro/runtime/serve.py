@@ -9,10 +9,16 @@ largest batch whose P(deadline met) clears the target -- Table III turned into
 a scheduling policy (the beyond-paper integration of §V-D).
 
 The engine closes the measurement loop of the online re-planner
-(``repro.core.replan``): every executed batch's (size, latency) is handed to
-an optional observer -- typically ``ReplanController.observe_batch_latency``
--- and ``plan_aware_batch_size`` re-runs the admission policy against the
-*current* plan's predicted makespan, so the admitted batch tracks the channel.
+(``repro.core.replan``) on both axes: every executed batch's (size, latency)
+is handed to an optional observer -- typically
+``ReplanController.observe_batch_latency`` -- and per-ES chunk timings
+reported through ``observe_es_time`` feed ``ReplanController.observe_compute``
+(the compute side of joint compute+link adaptation: a straggling secondary is
+attributed, not just absorbed into the scalar calibration).
+``plan_aware_batch_size`` re-runs the admission policy against the *current*
+plan's predicted makespan, so the admitted batch tracks channel and compute
+drift alike; a return of ``0`` means shed -- no batch size can meet the
+deadline at the target reliability.
 The same loop drives per-task placement
 (``repro.core.placement.PlacementController``): a bucket switch re-places
 every task over the shared ES pool, and the controller's
@@ -58,6 +64,16 @@ class ServeConfig:
     max_delay_s: float = 0.002
     pad_to_max: bool = True  # keep one compiled shape (prod: bucketed shapes)
 
+    def __post_init__(self) -> None:
+        # choose_batch_size/plan_aware_batch_size return 0 to mean "shed"; an
+        # engine built with max_batch=0 would busy-loop taking empty batches
+        # forever, so refuse loudly -- the caller must handle shedding itself
+        if self.max_batch < 1:
+            raise ValueError(
+                f"max_batch must be >= 1, got {self.max_batch}; an admission "
+                f"result of 0 means shed/reject -- do not build an engine on it"
+            )
+
 
 class BatchingEngine:
     """Deadline-aware dynamic batcher around a jitted ``fn(batch_payloads)``."""
@@ -68,6 +84,7 @@ class BatchingEngine:
         cfg: ServeConfig,
         clock: Callable = time.monotonic,
         observer: Callable[[int, float], None] | None = None,
+        es_observer: Callable[[str, float, float], None] | None = None,
     ):
         self.fn = fn
         self.cfg = cfg
@@ -75,6 +92,10 @@ class BatchingEngine:
         # called with (batch_size, elapsed_s) after every executed batch; wire
         # ReplanController.observe_batch_latency here to close the replan loop
         self.observer = observer
+        # called with (es_name, flops, elapsed_s) for every reported per-ES
+        # chunk execution; wire ReplanController.observe_compute here to close
+        # the compute side of the joint replan loop (see observe_es_time)
+        self.es_observer = es_observer
         self.queue: list[Request] = []  # deadline-ordered heap (EDF)
         self.completed: list[Request] = []
         self._rid = 0
@@ -89,6 +110,18 @@ class BatchingEngine:
         )
         heapq.heappush(self.queue, req)
         return self._rid
+
+    def observe_es_time(self, es: str, flops: float, elapsed_s: float) -> None:
+        """Per-ES timing hook: the distributed executor reports one measured
+        compute chunk (which ES ran it, its FLOP count, wall-clock) as it
+        completes.  Forwards to ``es_observer`` -- typically
+        ``ReplanController.observe_compute`` -- so a straggling secondary
+        moves the controller's compute estimate and, past the hysteresis,
+        triggers a joint re-plan/re-placement.  The whole-batch ``observer``
+        only calibrates a scalar latency factor; this hook is what attributes
+        slowness to a *specific* ES."""
+        if self.es_observer is not None:
+            self.es_observer(es, flops, elapsed_s)
 
     def _take_batch(self) -> list[Request]:
         batch = []
@@ -148,8 +181,14 @@ def choose_batch_size(
     max_batch: int = 64,
 ) -> int:
     """Largest batch size whose service reliability clears ``target``
-    (paper §V-D as an admission-control policy)."""
-    best = 1
+    (paper §V-D as an admission-control policy).
+
+    Returns ``0`` when *no* batch size clears the target: the request stream
+    cannot meet its deadline at the required reliability on the current plan
+    and channel, so the caller must shed/reject (or renegotiate the deadline)
+    rather than admit doomed work.  The historical behaviour of falling back
+    to ``1`` silently admitted requests that were already known to miss."""
+    best = 0
     for b in range(1, max_batch + 1):
         t_inf = per_batch_latency_s(b)
         rel = service_reliability(channel, t_inf, deadline_s)
@@ -173,7 +212,12 @@ def plan_aware_batch_size(
     is serving right now -- the closed form on the shared plan, or the
     shared-pool DES over the per-task placement (calibrated by measured batch
     latencies either way) -- so after a re-plan or re-placement the admitted
-    batch size follows without re-measuring a latency curve."""
+    batch size follows without re-measuring a latency curve.
+
+    Like :func:`choose_batch_size`, returns ``0`` when even a single-task
+    batch cannot clear ``target`` under the current plan's predicted
+    makespan: the caller sheds until the controller re-plans onto a faster
+    operating point (or the channel recovers)."""
     return choose_batch_size(
         controller.predicted_latency, deadline_s, channel, target=target, max_batch=max_batch
     )

@@ -35,11 +35,26 @@ def halo_sizes(k: int, s: int, p: int) -> tuple[int, int]:
     return lo, max(0, hi)
 
 
+def _check_halo_fits(hs: int, lo: int, hi: int) -> None:
+    """A neighbour can only donate rows it owns: a halo larger than the shard
+    height would need rows from *two* shards away.  ``x[:, -lo:]`` silently
+    truncates to the ``hs`` available rows in that case -- the receiving
+    shard would convolve wrong (shifted) rows -- so fail loudly instead."""
+    if lo > hs or hi > hs:
+        raise ValueError(
+            f"halo exceeds shard height: need lo={lo}/hi={hi} rows from the "
+            f"neighbouring shards but each shard holds only {hs} rows; use "
+            f"fewer/taller shards (or run this layer unsharded)"
+        )
+
+
 def exchange_halos(x: jax.Array, lo: int, hi: int, axis_name: str) -> jax.Array:
     """Return x extended with ``lo`` rows from above and ``hi`` rows from below.
 
     Edge shards receive zeros (the conv's zero padding).  x: [B, Hs, W, C].
-    """
+    Raises ``ValueError`` when the shard is too thin to donate the requested
+    halo (``lo > Hs`` or ``hi > Hs``) instead of silently truncating."""
+    _check_halo_fits(x.shape[1], lo, hi)
     n = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     parts = [x]
@@ -96,6 +111,7 @@ def conv2d_spatial(
 
     # --- HALP schedule: issue halos first, compute interior, then boundaries.
     # (x is already width-padded, so the halos carry the width padding too.)
+    _check_halo_fits(hs, lo, hi)
     n = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     top_halo = bot_halo = None

@@ -208,6 +208,39 @@ def test_placement_controller_replaces_on_bucket_switch():
     assert isinstance(switched, TaskPlacement)
 
 
+def test_placement_controller_replaces_on_compute_straggler():
+    """A straggling ES moves its compute bucket: the controller re-places all
+    tasks against the degraded platform, and the straggler's assignment load
+    shrinks (here: e1, nominally the fastest ES, collapses to 0.15x and the
+    new placement no longer leans on it)."""
+    pool = hetero_pool(4)
+    ctl = _controller(pool)
+    first = ctl.placement_for_epoch()
+    t_e1 = next(t for t, g in enumerate(first.assignments) if "e1" in g)
+    rows_before = sum(
+        pt.out["e1"].rows for pt in first.plans[t_e1].parts if "e1" in pt.out
+    )
+    nom = pool.platform_of("e1").eff_flops
+    for _ in range(4):  # past the hysteresis
+        ctl.observe_compute("e1", 1e9, 1e9 / (0.15 * nom))
+        ctl.placement_for_epoch()
+    switched = ctl.placement
+    # the gradual EWMA may cross more than one band on its way down
+    assert ctl.replans >= 1 and ctl.optimizer_calls >= 2
+    assert switched is not first
+    # the degraded platform reaches the placement engine...
+    est = ctl.estimated_topology()
+    # EWMA after 4 samples of 0.15x sits near 0.26x; band rep within a band
+    assert est.platform_of("e1").eff_flops < 0.35 * nom
+    assert est.platform_of("e2").eff_flops == pool.platform_of("e2").eff_flops
+    # ...and the straggler carries fewer rows than it did as the fastest ES
+    t_e1b = next(t for t, g in enumerate(switched.assignments) if "e1" in g)
+    rows_after = sum(
+        pt.out["e1"].rows for pt in switched.plans[t_e1b].parts if "e1" in pt.out
+    )
+    assert rows_after < rows_before
+
+
 def test_placement_controller_serving_surface():
     from repro.core.reliability import OffloadChannel
     from repro.runtime.serve import plan_aware_batch_size

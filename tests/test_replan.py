@@ -1,6 +1,8 @@
 """Online re-planning tests: rate estimator, bucketing, plan cache,
 hysteresis, channel replay, serving integration, and losslessness of
 replanned plans."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -8,6 +10,7 @@ import pytest
 from repro.core import (
     AGX_XAVIER,
     CollabTopology,
+    ComputeRateEstimator,
     GaussMarkovTrace,
     Link,
     OffloadChannel,
@@ -16,12 +19,15 @@ from repro.core import (
     ReplanController,
     StaticPlanner,
     bucket_rate,
+    compute_band_flops,
+    compute_bucket,
     optimize_static,
     rate_bucket,
     replay_rate_trace,
+    replay_trace,
 )
 from repro.core.reliability import IMAGE_BYTES
-from repro.core.replan import LinkRateEstimator
+from repro.core.replan import LinkRateEstimator, topology_fingerprint
 from repro.models import vgg
 from repro.runtime.serve import plan_aware_batch_size
 from repro.spatial import run_plan
@@ -45,10 +51,26 @@ def small_topology() -> CollabTopology:
 FAST = ReplanConfig(use_simulator=False, alpha=1.0, hysteresis=1, bucket_frac=0.5)
 
 
+def fast_link_topology() -> CollabTopology:
+    """Same cluster on 50 Gbps links: compute-bound, so per-ES compute drift
+    (not the channel) dominates the makespan -- the straggler test regime."""
+    return CollabTopology(
+        host="e0",
+        secondaries=("a", "b"),
+        platforms={"e0": AGX_XAVIER, "a": AGX_XAVIER, "b": AGX_XAVIER},
+        default_link=Link(50e9),
+    )
+
+
 def observe_rate(ctl: ReplanController, rate: float) -> None:
     """One epoch's worth of probe observations on b's (volatile) link."""
     for pair in (("e0", "b"), ("b", "e0")):
         ctl.observe_transfer(*pair, IMAGE_BYTES, 8.0 * IMAGE_BYTES / rate)
+
+
+def observe_compute(ctl: ReplanController, es: str, flops_rate: float) -> None:
+    """One epoch's worth of timing probes on one ES's compute."""
+    ctl.observe_compute(es, 1e9, 1e9 / flops_rate)
 
 
 # -- bucketing ----------------------------------------------------------------
@@ -76,6 +98,54 @@ def test_rate_bucket_exact_mode_and_errors():
         rate_bucket(0.0, 0.25)
 
 
+def test_compute_bucket_anchored_at_nominal():
+    """Compute bands are centred on the calibrated nominal: the seed estimate
+    sits in band 0 and band 0's representative is the nominal *exactly* --
+    the property that keeps an undrifted joint controller bit-identical to
+    the link-only controller."""
+    nom = AGX_XAVIER.eff_flops
+    f = 0.3
+    assert compute_bucket(nom, nom, f) == 0
+    assert compute_band_flops(0, nom, f) == nom  # exact, not approximate
+    # a straggler collapsing to ~1/3 speed lands several bands down, and the
+    # representative stays within the band's width of the estimate
+    b = compute_bucket(0.3 * nom, nom, f)
+    assert b < 0
+    rep = compute_band_flops(b, nom, f)
+    assert rep / (0.3 * nom) < (1 + f) and (0.3 * nom) / rep < (1 + f)
+    # monotone in the estimate
+    ests = [nom * (0.25 * 1.2**i) for i in range(12)]
+    assert [compute_bucket(e, nom, f) for e in ests] == sorted(
+        compute_bucket(e, nom, f) for e in ests
+    )
+    # small jitter inside the band does not move the key
+    assert compute_bucket(nom * 1.05, nom, f) == 0
+    # exact mode + errors
+    assert compute_bucket(1.23e12, nom, 0.0) == 1.23e12
+    assert compute_band_flops(1.23e12, nom, 0.0) == 1.23e12
+    with pytest.raises(ValueError):
+        compute_bucket(0.0, nom, f)
+    with pytest.raises(ValueError):
+        compute_bucket(nom, 0.0, f)
+
+
+def test_topology_fingerprint_excludes_eff_flops():
+    """eff_flops moved out of the fingerprint and into the bucketed key space:
+    two same-named clusters at different compute levels share a fingerprint
+    (their keys differ through the compute band anchors instead)."""
+    a = small_topology()
+    b = CollabTopology(
+        host="e0",
+        secondaries=("a", "b"),
+        platforms={es: AGX_XAVIER.scaled(0.5) for es in ("e0", "a", "b")},
+        default_link=Link(NOMINAL),
+    )
+    assert topology_fingerprint(a) == topology_fingerprint(b)
+    ctl_a = ReplanController(NET, a, FAST)
+    ctl_b = ReplanController(NET, b, FAST)
+    assert ctl_a._bucket_key() != ctl_b._bucket_key()  # anchors differ
+
+
 # -- estimator ----------------------------------------------------------------
 
 
@@ -92,6 +162,25 @@ def test_estimator_seeds_from_topology_and_ewma():
         est.observe("e0", "b", 0.0, 1.0)
     with pytest.raises(ValueError):
         LinkRateEstimator({}, alpha=0.0)
+
+
+def test_compute_estimator_seeds_from_topology_and_ewma():
+    topo = small_topology()
+    est = ComputeRateEstimator.from_topology(topo, alpha=0.4)
+    nom = AGX_XAVIER.eff_flops
+    # seeds cover the host too (host zones are compute the optimum reads)
+    assert set(est.rates()) == {"e0", "a", "b"}
+    assert est.rate("b") == nom
+    # one timed chunk at 1/3 the nominal rate moves the estimate 40% over
+    est.observe("b", 1e9, 1e9 / (nom / 3.0))
+    assert est.rate("b") == pytest.approx(0.6 * nom + 0.4 * nom / 3.0)
+    assert est.rate("a") == nom  # per-ES independence
+    with pytest.raises(ValueError):
+        est.observe("b", -1.0, 1.0)
+    with pytest.raises(ValueError):
+        est.observe("b", 1e9, 0.0)
+    with pytest.raises(ValueError):
+        ComputeRateEstimator({}, alpha=1.5)
 
 
 # -- plan cache ---------------------------------------------------------------
@@ -213,6 +302,123 @@ def test_serving_reads_do_not_skew_epoch_telemetry():
     assert ctl.cache.hits == hits + 1
 
 
+# -- joint compute+link adaptation --------------------------------------------
+
+
+def test_undrifted_compute_matches_link_only_controller():
+    """With compute at the nominals, the joint controller's estimated topology
+    and served plans are identical to the link-only (adapt_compute=False)
+    controller's -- including across link-bucket switches.  This pins the
+    anchored-band property: compute adaptivity costs nothing until a
+    straggler actually appears."""
+    topo = small_topology()
+    joint = ReplanController(NET, topo, FAST)
+    link_only = ReplanController(
+        NET, topo, dataclasses.replace(FAST, adapt_compute=False)
+    )
+    est = joint.estimated_topology()
+    for es in topo.es_names:  # band-0 representatives are the nominals, exactly
+        assert est.platform_of(es).eff_flops == topo.platform_of(es).eff_flops
+    for rate in (NOMINAL, 30e6, NOMINAL, 60e6):
+        observe_rate(joint, rate)
+        observe_rate(link_only, rate)
+        assert joint.plan_for_epoch().parts == link_only.plan_for_epoch().parts
+    assert joint.replans == link_only.replans >= 2
+
+
+def test_compute_straggler_triggers_replan_and_cache_revisit():
+    """A straggling secondary switches the compute bucket, re-plans away from
+    it, and revisiting the nominal operating point is a cache hit."""
+    topo = fast_link_topology()
+    ctl = ReplanController(NET, topo, FAST)
+    nom = AGX_XAVIER.eff_flops
+    p0 = ctl.plan_for_epoch()  # miss 1: nominal compute
+    observe_compute(ctl, "b", 0.3 * nom)
+    assert ctl.step() is True  # compute band moved -> adopted (hysteresis 1)
+    p_slow = ctl.current().plan  # miss 2: straggler bucket
+    rows = lambda p: sum(pt.out["b"].rows for pt in p.parts)
+    assert rows(p_slow) < rows(p0)  # rows migrated off the straggler
+    observe_compute(ctl, "b", nom)  # straggler recovers
+    assert ctl.plan_for_epoch() is p0  # hit: nominal bucket cached
+    observe_compute(ctl, "b", 0.3 * nom)
+    assert ctl.plan_for_epoch() is p_slow  # hit: straggler bucket cached
+    assert ctl.cache.misses == 2 and ctl.cache.hits == 2
+    assert ctl.optimizer_calls == 2 and ctl.replans == 3
+
+
+def test_adapt_compute_false_freezes_compute_estimates():
+    topo = fast_link_topology()
+    ctl = ReplanController(NET, topo, dataclasses.replace(FAST, adapt_compute=False))
+    nom = AGX_XAVIER.eff_flops
+    key0 = ctl._bucket_key()
+    observe_compute(ctl, "b", 0.2 * nom)  # dropped: link-only baseline
+    assert ctl.compute_estimator.rate("b") == nom
+    assert ctl._bucket_key() == key0
+    assert ctl.step() is False
+    # mis-wired feeders still fail loudly even when frozen
+    with pytest.raises(ValueError):
+        ctl.observe_compute("nope", 1e9, 1.0)
+    with pytest.raises(ValueError):
+        ctl.observe_compute("b", -1e9, 1.0)
+
+
+def test_shared_hysteresis_debounces_compute_excursions():
+    """One deviant compute epoch never thrashes the plan; the shared counter
+    also mixes link and compute deviations (epochs-away-from-active)."""
+    topo = fast_link_topology()
+    ctl = ReplanController(
+        NET, topo, ReplanConfig(alpha=1.0, hysteresis=2, bucket_frac=0.5)
+    )
+    nom = AGX_XAVIER.eff_flops
+    observe_compute(ctl, "b", 0.3 * nom)
+    assert ctl.step() is False  # first epoch outside
+    observe_compute(ctl, "b", nom)
+    assert ctl.step() is False  # back inside: counter resets
+    assert ctl.replans == 0
+    observe_compute(ctl, "b", 0.3 * nom)
+    assert ctl.step() is False
+    observe_rate(ctl, 10e6)  # second epoch outside -- via the *link* axis
+    assert ctl.step() is True  # shared hysteresis: mixed deviations adopt
+    assert ctl.replans == 1
+
+
+# -- satellite coverage: eviction fallthrough + calibration clamp -------------
+
+
+def test_active_result_falls_through_to_current_after_eviction():
+    """_active_result peeks at the cache; if the active entry was evicted it
+    must fall through to current() (re-optimising) rather than serving
+    nothing."""
+    cache = PlanCache(capacity=1)
+    ctl = ReplanController(NET, small_topology(), FAST, cache=cache)
+    p0 = ctl.plan_for_epoch()  # fills the single slot
+    calls = ctl.optimizer_calls
+    cache.put(("someone", "else"), object())  # evicts the active entry
+    assert cache.peek((ctl._fingerprint, ctl._active)) is None
+    plan = ctl.plan  # out-of-epoch read: peek misses -> current() -> re-optimise
+    assert plan.parts == p0.parts  # same operating point, same plan
+    assert ctl.optimizer_calls == calls + 1
+    assert ctl.plan is plan  # re-cached: subsequent reads peek again
+
+
+def test_observe_batch_latency_clamp_bounds():
+    """The measured/predicted ratio is clamped to [0.1, 10] before the EWMA,
+    so one outlier batch cannot poison admission control in either
+    direction; non-measurements (zero elapsed, empty batch) are ignored."""
+    ctl = ReplanController(NET, small_topology(), FAST)  # alpha = 1.0
+    base = ctl._raw_predicted_latency(2)
+    ctl.observe_batch_latency(2, 1e6)  # absurdly slow measurement
+    assert ctl.stats()["calibration"] == 10.0  # clamped at the upper bound
+    ctl.observe_batch_latency(2, base * 1e-9)  # absurdly fast measurement
+    assert ctl.stats()["calibration"] == 0.1  # clamped at the lower bound
+    ctl.observe_batch_latency(2, 3.0 * base)  # in-range ratio passes through
+    assert ctl.stats()["calibration"] == pytest.approx(3.0)
+    for bad in ((2, 0.0), (2, -1.0), (0, 1.0)):
+        before = ctl.stats()["calibration"]
+        ctl.observe_batch_latency(*bad)
+        assert ctl.stats()["calibration"] == before
+
+
 # -- trace + replay -----------------------------------------------------------
 
 
@@ -239,6 +445,80 @@ def test_replay_validates_traces():
     with pytest.raises(ValueError, match="shortest trace"):
         replay_rate_trace(NET, topo, planner, short, n_epochs=5, n_tasks=1)
     assert len(replay_rate_trace(NET, topo, planner, short, n_tasks=1)) == 3
+
+
+def test_replay_trace_validates_compute_traces():
+    topo = fast_link_topology()
+    planner = StaticPlanner(optimize_static(NET, topo, FAST).plan)
+    with pytest.raises(ValueError, match="at least one"):
+        replay_trace(NET, topo, planner, n_tasks=1)
+    with pytest.raises(ValueError, match="not an ES"):
+        replay_trace(
+            NET, topo, planner, compute_rates={"ghost": [1e12] * 3}, n_tasks=1
+        )
+    with pytest.raises(ValueError, match="positive"):
+        replay_trace(NET, topo, planner, compute_rates={"b": [0.0] * 3}, n_tasks=1)
+    # n_epochs bounded by the shortest trace across BOTH kinds
+    nom = AGX_XAVIER.eff_flops
+    with pytest.raises(ValueError, match="shortest trace"):
+        replay_trace(
+            NET, topo, planner,
+            link_rates={("e0", "b"): [50e9] * 9},
+            compute_rates={"b": [nom] * 3},
+            n_epochs=5, n_tasks=1,
+        )
+    run = replay_trace(
+        NET, topo, planner, compute_rates={"b": [nom, 0.5 * nom, nom]}, n_tasks=1
+    )
+    assert len(run) == 3
+    assert run[1]["compute_rates"] == {"b": 0.5 * nom}
+    # a 2x-slower b with no re-plan shows up in the true (DES) makespan
+    assert run[1]["makespan"] > run[0]["makespan"]
+
+
+def test_replay_joint_adaptation_beats_static_on_straggler():
+    """b's compute collapses to 0.3x at epoch 3 and stays: the joint
+    controller re-balances rows off the straggler after the hysteresis lag
+    and wins on mean makespan; the link-only controller (adapt_compute=False)
+    serves the static plan throughout -- on this fixed channel it never even
+    replans."""
+    topo = fast_link_topology()
+    nom = AGX_XAVIER.eff_flops
+    n = 14
+    trace = {"b": [nom] * 3 + [0.3 * nom] * (n - 3)}
+    cfg = ReplanConfig(n_tasks=2, hysteresis=1, alpha=1.0)
+    static = replay_trace(
+        NET, topo, StaticPlanner(optimize_static(NET, topo, cfg).plan),
+        compute_rates=trace, n_tasks=2,
+    )
+    link_only_ctl = ReplanController(
+        NET, topo, dataclasses.replace(cfg, adapt_compute=False)
+    )
+    link_only = replay_trace(NET, topo, link_only_ctl, compute_rates=trace, n_tasks=2)
+    joint_ctl = ReplanController(NET, topo, cfg)
+    joint = replay_trace(NET, topo, joint_ctl, compute_rates=trace, n_tasks=2)
+    mean = lambda run: sum(r["makespan"] for r in run) / len(run)
+    assert link_only_ctl.replans == 0  # compute-blind: nothing to react to
+    assert mean(link_only) == pytest.approx(mean(static))
+    assert joint_ctl.replans >= 1
+    assert mean(joint) < 0.95 * mean(link_only)
+    assert joint[-1]["makespan"] < link_only[-1]["makespan"]
+
+
+def test_compute_replanned_plan_is_lossless():
+    """A plan re-optimised for a straggler bucket is still an exact row
+    partition: executing it reproduces the single-device forward."""
+    ctl = ReplanController(NET, fast_link_topology(), FAST)
+    observe_compute(ctl, "b", 0.3 * AGX_XAVIER.eff_flops)
+    plan = ctl.plan_for_epoch()
+    assert sum(pt.out["b"].rows for pt in plan.parts) < sum(
+        pt.out["a"].rows for pt in plan.parts
+    )
+    params = vgg.init(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, CFG.img_res, CFG.img_res, 3))
+    ref = vgg.features(params, CFG, x)
+    out = run_plan(plan, params["features"], vgg.apply_layer, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
 def test_replay_adaptive_beats_static_on_sustained_collapse():
@@ -272,9 +552,12 @@ def test_plan_aware_batch_size_tracks_channel():
     channel = OffloadChannel(rate_bps=100e6, sigma_s=1e-3)
     generous = plan_aware_batch_size(ctl, 2.0, channel, target=0.999, max_batch=8)
     tight = plan_aware_batch_size(ctl, 0.045, channel, target=0.999, max_batch=8)
-    assert 1 <= tight <= generous <= 8
+    assert 0 <= tight <= generous <= 8
     assert generous == 8  # 2 s of slack admits everything on the small net
+    # an infeasible deadline sheds (0) instead of admitting a doomed batch
+    assert tight == 0
     mid = plan_aware_batch_size(ctl, 0.06, channel, target=0.999, max_batch=8)
+    assert mid >= 1
     # a measured collapse raises the predicted makespan, shrinking admission
     observe_rate(ctl, 5e6)
     ctl.step()

@@ -123,6 +123,176 @@ def test_fault_tolerant_trainer_recovers():
         assert int(s2[2]) == 6  # step counter advanced to completion
 
 
+class _CountStream:
+    """Deterministic toy stream: batch i carries the scalar i."""
+
+    def batch_at(self, i):
+        return {"x": jnp.asarray(float(i))}
+
+
+def _toy_trainer(ckpt_dir, max_failures=3, fault_hook=None, **kw):
+    def step(state, x):
+        return {"w": state["w"] + x}, {"loss": x}
+
+    cfg = FaultConfig(ckpt_dir=ckpt_dir, ckpt_every=2, max_failures=max_failures)
+    return FaultTolerantTrainer(step, _CountStream(), cfg, fault_hook=fault_hook, **kw)
+
+
+def _fault_once_at(steps):
+    fired = set()
+
+    def hook(i):
+        if i in steps and i not in fired:
+            fired.add(i)
+            raise InjectedFault(f"chaos at step {i}")
+
+    return hook
+
+
+def test_trainer_stats_dedupe_replayed_steps():
+    """Steps replayed after a checkpoint restore must not be re-counted: a
+    fault at step 3 (ckpt at 2) replays step 2, which historically double-fed
+    steps/losses/EMA for every replayed step."""
+    with tempfile.TemporaryDirectory() as d:
+        t = _toy_trainer(d, fault_hook=_fault_once_at({3}))
+        state, stats = t.run({"w": jnp.zeros(())}, 6, resume=False)
+        assert stats.failures == 1 and stats.restores == 1
+        assert stats.steps == 6  # not 7: the replayed step 2 counts once
+        assert stats.losses == [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+        assert float(state["w"]) == sum(range(6))  # replay itself is correct
+
+
+def test_trainer_retry_budget_is_consecutive_not_total():
+    """max_failures bounds *consecutive unrecovered* failures: a long run with
+    sparse transient faults (more total faults than the budget, but recovered
+    progress in between) must complete.  The historical counter never reset,
+    so it raised on the (max_failures+1)-th fault of the whole run."""
+    with tempfile.TemporaryDirectory() as d:
+        t = _toy_trainer(d, max_failures=1, fault_hook=_fault_once_at({1, 3, 5}))
+        state, stats = t.run({"w": jnp.zeros(())}, 8, resume=False)
+        assert stats.failures == 3  # the stats keep counting the total
+        assert stats.steps == 8 and float(state["w"]) == sum(range(8))
+
+
+def test_trainer_consecutive_failures_still_bounded():
+    """A genuinely stuck step (faulting every attempt) must still raise."""
+
+    def always_boom(i):
+        if i == 3:
+            raise InjectedFault("hard fault at step 3")
+
+    with tempfile.TemporaryDirectory() as d:
+        t = _toy_trainer(d, max_failures=2, fault_hook=always_boom)
+        with pytest.raises(RuntimeError, match="consecutive"):
+            t.run({"w": jnp.zeros(())}, 6, resume=False)
+
+
+def test_trainer_recovery_before_first_checkpoint_rewinds_state():
+    """A fault before any checkpoint exists must rewind the *state* together
+    with the step index: rewinding only the index re-applies already-consumed
+    batches to an already-advanced state (and the stats dedupe would make
+    that corruption silent)."""
+
+    class _OneBasedStream:
+        def batch_at(self, i):
+            return {"x": jnp.asarray(float(i + 1))}  # nonzero first batch
+
+    def step(state, x):
+        return {"w": state["w"] + x}, {"loss": x}
+
+    with tempfile.TemporaryDirectory() as d:
+        cfg = FaultConfig(ckpt_dir=d, ckpt_every=10, max_failures=3)  # no ckpt fits
+        t = FaultTolerantTrainer(
+            step, _OneBasedStream(), cfg, fault_hook=_fault_once_at({1})
+        )
+        state, stats = t.run({"w": jnp.zeros(())}, 4, resume=False)
+        assert stats.failures == 1
+        # batches 1..4 applied exactly once: 10, not 11 (batch 1 twice)
+        assert float(state["w"]) == 10.0
+        assert stats.steps == 4 and stats.losses == [1.0, 2.0, 3.0, 4.0]
+
+
+def test_trainer_recovery_ignores_stale_checkpoints_from_prior_runs():
+    """A fresh resume=False run recovering from a transient fault must not
+    restore a checkpoint a *previous* run left in the same ckpt_dir: that
+    would jump it to foreign state/progress (possibly past its own n_steps).
+    Only checkpoints within this run's own [start_step, high_water] qualify;
+    otherwise the run replays from its entry state."""
+    with tempfile.TemporaryDirectory() as d:
+        t1 = _toy_trainer(d)
+        t1.run({"w": jnp.zeros(())}, 8, resume=False)  # leaves step_8 etc.
+        t2 = _toy_trainer(d, fault_hook=_fault_once_at({1}))
+        state, stats = t2.run({"w": jnp.zeros(())}, 4, resume=False)
+        assert stats.failures == 1
+        assert stats.steps == 4  # ran its own 4 steps, not run 1's leftovers
+        assert float(state["w"]) == sum(range(4))  # 0+1+2+3, from entry state
+
+
+def test_trainer_stats_count_fresh_reruns():
+    """The replay-dedupe watermark must not leak across runs: a second
+    resume=False run on the same trainer re-executes from step 0 for real,
+    so its steps count (and reach the compute observer) again."""
+    seen = []
+    with tempfile.TemporaryDirectory() as d:
+        t = _toy_trainer(
+            d, compute_observer=lambda es, fl, dt: seen.append(es),
+            step_flops=1e9,
+        )
+        t.run({"w": jnp.zeros(())}, 4, resume=False)
+        assert t.stats.steps == 4 and len(seen) == 4
+        t.run({"w": jnp.zeros(())}, 4, resume=False)  # fresh run, same trainer
+        assert t.stats.steps == 8 and len(seen) == 8
+
+
+def test_serve_config_rejects_shed_as_max_batch():
+    """Building an engine on an admission result of 0 (shed) would busy-loop
+    taking empty batches forever; ServeConfig refuses it loudly."""
+    with pytest.raises(ValueError, match="shed"):
+        ServeConfig(max_batch=0)
+
+
+def test_trainer_compute_observer_feeds_planner_once_per_step():
+    """The straggler-stats feed of the joint re-planner: each *newly
+    completed* step reports (es, flops, dt) exactly once -- replayed steps
+    after a restore must not double-feed the compute estimator."""
+    seen = []
+    with tempfile.TemporaryDirectory() as d:
+        t = _toy_trainer(
+            d,
+            fault_hook=_fault_once_at({3}),
+            compute_observer=lambda es, fl, dt: seen.append((es, fl, dt)),
+            es_name="b",
+            step_flops=2e9,
+        )
+        t.run({"w": jnp.zeros(())}, 6, resume=False)
+    assert len(seen) == 6  # one per unique step despite the replay
+    assert all(es == "b" and fl == 2e9 and dt > 0 for es, fl, dt in seen)
+    # and the samples drive a ComputeRateEstimator as wired in production
+    from repro.core import ComputeRateEstimator
+
+    est = ComputeRateEstimator({"b": 1e12}, alpha=1.0)
+    for es, fl, dt in seen:
+        est.observe(es, fl, dt)
+    assert est.rate("b") == pytest.approx(seen[-1][1] / seen[-1][2])
+
+
+def test_batching_engine_es_timing_hook():
+    """observe_es_time forwards per-ES chunk timings to the wired observer
+    (the compute half of the joint replan loop); without a wire it is a
+    no-op."""
+    seen = []
+    eng = BatchingEngine(
+        jax.jit(lambda b: b),
+        ServeConfig(max_batch=2),
+        es_observer=lambda es, fl, dt: seen.append((es, fl, dt)),
+    )
+    eng.observe_es_time("e1", 3.2e9, 0.004)
+    eng.observe_es_time("e2", 1.6e9, 0.004)
+    assert seen == [("e1", 3.2e9, 0.004), ("e2", 1.6e9, 0.004)]
+    # unwired engine: silently ignored
+    BatchingEngine(jax.jit(lambda b: b), ServeConfig()).observe_es_time("e1", 1.0, 1.0)
+
+
 def test_losses_decrease_smoke():
     from repro.runtime.train import train_smoke
 
@@ -194,9 +364,16 @@ def test_choose_batch_size_sigma_zero_deterministic():
     assert choose_batch_size(lat, 4.0 / 30.0, ch, target=0.99999, max_batch=16) == 6
 
 
-def test_choose_batch_size_unreachable_target_falls_back_to_one():
+def test_choose_batch_size_unreachable_target_sheds():
+    """When no batch size clears the reliability target, the policy returns 0
+    (shed/reject) -- the historical fallback of 1 silently admitted requests
+    that were already known to miss their deadline."""
     ch = OffloadChannel(rate_bps=40e6, sigma_s=5e-3)
-    assert choose_batch_size(lambda b: 10.0, 4.0 / 30.0, ch, max_batch=16) == 1
+    assert choose_batch_size(lambda b: 10.0, 4.0 / 30.0, ch, max_batch=16) == 0
+    # a deterministic channel whose offload alone blows the deadline: even
+    # b=1 with zero inference time is infeasible -> shed
+    ch0 = OffloadChannel(rate_bps=1e6, sigma_s=0.0)  # mu = 4 s >> D
+    assert choose_batch_size(lambda b: 0.0, 4.0 / 30.0, ch0, max_batch=4) == 0
 
 
 def test_choose_batch_size_non_monotone_latency():

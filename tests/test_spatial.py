@@ -135,6 +135,31 @@ def test_halo_sizes():
     assert halo_sizes(7, 1, 3) == (3, 3)  # ConvNeXt depthwise
 
 
+def test_exchange_halos_rejects_thin_shards():
+    """A halo larger than the shard height would need rows from two shards
+    away; ``x[:, -lo:]`` silently truncated to whatever the shard held,
+    shipping wrong rows.  It must raise instead -- the geometry check runs
+    before any collective, so it is testable without a mesh."""
+    from repro.spatial import conv2d_spatial, exchange_halos
+    from repro.models.common import conv_params
+
+    x = jnp.zeros((1, 2, 8, 3))  # 2-row shard
+    with pytest.raises(ValueError, match="halo exceeds shard height"):
+        exchange_halos(x, 3, 0, "sp")  # lo > Hs
+    with pytest.raises(ValueError, match="halo exceeds shard height"):
+        exchange_halos(x, 0, 3, "sp")  # hi > Hs
+    # boundary: a halo of exactly the shard height is legal (whole-shard
+    # donation) -- the geometry check must not reject it
+    from repro.spatial.halo import _check_halo_fits
+
+    _check_halo_fits(2, 2, 2)  # no raise
+    # the overlapped HALP schedule path validates too (its own ppermutes
+    # slice x[:, -lo:] the same way): 7x7 conv on a 2-row shard needs lo=hi=3
+    params = conv_params(jax.random.PRNGKey(0), 7, 3, 4)
+    with pytest.raises(ValueError, match="halo exceeds shard height"):
+        conv2d_spatial(x, params, k=7, s=1, p=3, overlap=True)
+
+
 def test_spmd_halo_exchange_multidevice():
     """Run the shard_map halo-exchange suite on 8 forced host devices."""
     script = os.path.join(os.path.dirname(__file__), "spatial_multidev_impl.py")
