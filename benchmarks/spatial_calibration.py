@@ -1,0 +1,299 @@
+"""Spatial calibration: measured kernel wall-clock vs the DES's predictions.
+
+Closes the measured-vs-modelled loop for the spatial executor
+(``repro.spatial``).  Three stages:
+
+1. **Measure.**  Every layer of a VGG-style backbone is executed for real --
+   the lax conv the unfused schedule runs, and the fused Pallas halo-conv
+   (``repro.kernels.halo_conv``, ``interpret=True`` on CPU CI) -- and timed
+   per shard row-count.  This yields genuine per-layer FLOP rates for the
+   machine the benchmark runs on.
+
+2. **Compose.**  The measured per-layer rates are composed into full-network
+   makespans with the schedule algebra of paper eqs. 9-15, priced by the
+   repo's DES (:class:`~repro.core.simulator.Sim`) over an emulated skewed
+   4-device mesh (per-device capacity factors scale the measured times --
+   a pod mixing device generations):
+
+   * *unfused*  -- halo exchange, then the layer's full compute
+     (compute waits on the ppermute);
+   * *fused*    -- interior rows start immediately, only the boundary rows
+     wait on the halos (the ``engine="pallas"`` fused schedule);
+   * *equal*    -- H/N rows per shard; *weighted* -- rows follow capacity
+     (``shard_heights(ratios=caps)``), the ``plan_even(ratios=...)``
+     deployment.
+
+   Fused must beat unfused (halo latency hidden behind interior compute) and
+   weighted must beat equal (no shard straggles) -- both pinned by
+   ``tests/test_benchmarks.py``.  The composition uses the *lax*-measured
+   rates for both schedules: interpret-mode Pallas timing is an emulation
+   artefact, and using one rate isolates the schedule difference (on real
+   TPU hardware the recorded ``pallas_s`` timings replace it).
+
+3. **Calibrate.**  The weighted run's per-shard ``(es, flops, elapsed)``
+   samples -- the exact triples ``run_plan(..., time_observer=...)`` emits in
+   serving -- feed a :class:`~repro.core.replan.ComputeRateEstimator` seeded
+   with (deliberately wrong) nominal platform rates.  The DES is then priced
+   nominal vs calibrated against the measured-rate ground truth: the
+   calibrated prediction error must come in far below the nominal one.
+
+Emits ``BENCH_spatial.json`` (``--out`` to move it, ``--smoke`` for the CI
+artifact run).  CSV rows (``name,us_per_call,derived``) match the other
+benchmarks' format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import AGX_XAVIER, Link  # noqa: E402
+from repro.core.replan import ComputeRateEstimator  # noqa: E402
+from repro.core.simulator import Sim  # noqa: E402
+from repro.kernels.halo_conv.halo_conv import halo_conv2d  # noqa: E402
+from repro.models.vgg import VGGConfig  # noqa: E402
+from repro.spatial.halo import halo_sizes, shard_heights, spatial_alignment  # noqa: E402
+
+N_SHARDS = 4
+# emulated skewed mesh: per-device capacity factors (mixed device generations)
+CAPS = (1.0, 0.55, 0.35, 0.8)
+LINK = Link(200e6)  # ES-ES halo link (edge-box Ethernet class)
+NOMINAL_FLOPS = AGX_XAVIER.eff_flops  # the (wrong-for-CPU) nominal per shard
+
+
+def build_net(smoke: bool):
+    """3-block VGG body at 64 px: stride alignment 8 => 4-way weighted splits
+    stay stride-divisible through every pool."""
+    cfg = VGGConfig(
+        img_res=64,
+        width_mult=0.125 if smoke else 0.25,
+        num_classes=10,
+        blocks=((2, 64), (2, 128), (3, 256)),
+    )
+    return cfg.geom()
+
+
+def _time_fn(fn, *args, repeats: int) -> float:
+    jax.block_until_ready(fn(*args))  # compile / warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_layers(net, *, interpret: bool, repeats: int) -> list[dict]:
+    """Per-layer measured wall-clock at the equal-split shard height: the lax
+    conv over the halo-extended slab (what the unfused schedule executes) and
+    the fused Pallas halo-conv (what ``engine="pallas"`` executes)."""
+    sizes = net.sizes()
+    key = jax.random.PRNGKey(0)
+    out = []
+    for i, g in enumerate(net.layers):
+        r_in = sizes[i] // N_SHARDS
+        r_out = r_in // g.s
+        flops = net.layer_flops(i, r_out)
+        key, kx, kw = jax.random.split(key, 3)
+        if g.kind == "pool":
+            x = jax.random.normal(kx, (1, r_in, sizes[i], g.c_in))
+            pool = jax.jit(
+                lambda a: lax.reduce_window(
+                    a, -jnp.inf, lax.max, (1, g.k, g.k, 1), (1, g.s, g.s, 1), "VALID"
+                )
+            )
+            lax_s = _time_fn(pool, x, repeats=repeats)
+            pallas_s = None
+        else:
+            lo, hi = halo_sizes(g.k, g.s, g.p)
+            w_pad = sizes[i] + 2 * g.p
+            ext = jax.random.normal(kx, (1, (r_out - 1) * g.s + g.k, w_pad, g.c_in))
+            wts = jax.random.normal(kw, (g.k, g.k, g.c_in, g.c_out)) * 0.05
+            conv = jax.jit(
+                lambda a, w: lax.conv_general_dilated(
+                    a, w, (g.s, g.s), "VALID",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+            )
+            lax_s = _time_fn(conv, ext, wts, repeats=repeats)
+            x = jax.random.normal(kx, (1, r_in, sizes[i], g.c_in))
+            top = jnp.zeros((1, lo, sizes[i], g.c_in)) if lo else None
+            bot = jnp.zeros((1, hi, sizes[i], g.c_in)) if hi else None
+            fused = jax.jit(
+                lambda a, t, bb, w: halo_conv2d(
+                    a, t, bb, w, stride=g.s, padding=g.p, interpret=interpret
+                )
+            )
+            pallas_s = _time_fn(fused, x, top, bot, wts, repeats=repeats)
+        out.append(
+            dict(
+                layer=g.name, kind=g.kind, rows=r_out, flops=flops,
+                lax_s=lax_s, pallas_s=pallas_s,
+                rate=flops / lax_s,  # measured FLOP/s for this layer shape
+            )
+        )
+    return out
+
+
+def _halo_geometry(g):
+    """(lo, hi, boundary_out_rows) of one layer for the schedule algebra."""
+    lo, hi = (0, g.k - g.s) if g.kind == "pool" else halo_sizes(g.k, g.s, g.p)
+    nb = -(-lo // g.s) + -(-hi // g.s)  # output rows touching any halo
+    return lo, hi, nb
+
+
+def des_makespan(net, heights, rate_of, *, fused: bool, link: Link = LINK) -> float:
+    """Price one full forward through the DES: per-shard compute chains with
+    neighbour halo transfers on dedicated links.
+
+    ``rate_of(j, i)`` is shard j's FLOP/s on layer i (measured per-layer rates
+    for the ground truth; one scalar per shard for estimator predictions).
+    ``fused`` switches the per-layer dependency structure: unfused compute
+    waits on the halos; fused splits compute into an interior chunk dependent
+    only on the previous layer and a boundary chunk gated by the halos --
+    eqs. 9-15 as an event topology."""
+    sim = Sim()
+    sizes = net.sizes()
+    h = list(heights)
+    last: list[int | None] = [None] * N_SHARDS
+    for i, g in enumerate(net.layers):
+        lo, hi, nb = _halo_geometry(g)
+        t_halo_lo = link.comm_time(lo * sizes[i] * g.c_in * 4.0)
+        t_halo_hi = link.comm_time(hi * sizes[i] * g.c_in * 4.0)
+        halos: list[list[int]] = [[] for _ in range(N_SHARDS)]
+        for j in range(N_SHARDS):
+            if lo and j > 0:
+                halos[j].append(
+                    sim.add(f"halo_dn.{i}.{j}", f"link:{j-1}->{j}", t_halo_lo,
+                            [last[j - 1]])
+                )
+            if hi and j < N_SHARDS - 1:
+                halos[j].append(
+                    sim.add(f"halo_up.{i}.{j}", f"link:{j+1}->{j}", t_halo_hi,
+                            [last[j + 1]])
+                )
+        for j in range(N_SHARDS):
+            rows = h[j] // g.s
+            rate = rate_of(j, i)
+            if fused and halos[j] and rows > nb:
+                interior = sim.add(
+                    f"cmp_int.{i}.{j}", f"w{j}",
+                    net.layer_flops(i, rows - nb) / rate, [last[j]],
+                )
+                last[j] = sim.add(
+                    f"cmp_bnd.{i}.{j}", f"w{j}",
+                    net.layer_flops(i, nb) / rate, [interior] + halos[j],
+                )
+            else:
+                last[j] = sim.add(
+                    f"cmp.{i}.{j}", f"w{j}",
+                    net.layer_flops(i, rows) / rate, [last[j]] + halos[j],
+                )
+            h[j] = rows
+    return sim.run()
+
+
+def run_all(smoke: bool = False, out_path: str | None = "BENCH_spatial.json") -> dict:
+    net = build_net(smoke)
+    repeats = 2 if smoke else 5
+    layers = measure_layers(net, interpret=True, repeats=repeats)
+
+    equal = tuple([net.in_rows // N_SHARDS] * N_SHARDS)
+    weighted = shard_heights(
+        net.in_rows, N_SHARDS, ratios=CAPS, align=spatial_alignment(net)
+    )
+
+    def measured_rate(j, i):  # measured per-layer rate scaled by device capacity
+        return layers[i]["rate"] * CAPS[j]
+
+    makespans = {
+        f"{split}_{sched}": des_makespan(
+            net, hts, measured_rate, fused=(sched == "fused")
+        )
+        for split, hts in (("equal", equal), ("weighted", weighted))
+        for sched in ("unfused", "fused")
+    }
+    fused_speedup = makespans["equal_unfused"] / makespans["equal_fused"]
+    weighted_speedup = makespans["equal_fused"] / makespans["weighted_fused"]
+
+    # --- calibration loop: the weighted run's (es, flops, elapsed) samples ---
+    samples = []
+    h = list(weighted)
+    for i, g in enumerate(net.layers):
+        for j in range(N_SHARDS):
+            rows = h[j] // g.s
+            fl = net.layer_flops(i, rows)
+            samples.append((f"w{j}", fl, fl / measured_rate(j, i)))
+        h = [q // g.s for q in h]
+
+    est = ComputeRateEstimator({f"w{j}": NOMINAL_FLOPS for j in range(N_SHARDS)})
+    for _ in range(3):  # EWMA needs a few folds to forget the (wrong) nominal
+        est.observe_samples(samples)
+
+    truth = makespans["weighted_fused"]
+    pred_nominal = des_makespan(
+        net, weighted, lambda j, i: NOMINAL_FLOPS, fused=True
+    )
+    pred_calibrated = des_makespan(
+        net, weighted, lambda j, i: est.rate(f"w{j}"), fused=True
+    )
+    err_nominal = abs(pred_nominal - truth) / truth
+    err_calibrated = abs(pred_calibrated - truth) / truth
+
+    out = dict(
+        n_shards=N_SHARDS,
+        caps=CAPS,
+        link_bps=LINK.rate_bps,
+        smoke=smoke,
+        equal_heights=equal,
+        weighted_heights=weighted,
+        layers=layers,
+        makespans=makespans,
+        fused_speedup=fused_speedup,
+        weighted_speedup=weighted_speedup,
+        n_samples=len(samples),
+        rates_calibrated={f"w{j}": est.rate(f"w{j}") for j in range(N_SHARDS)},
+        pred_nominal=pred_nominal,
+        pred_calibrated=pred_calibrated,
+        err_nominal=err_nominal,
+        err_calibrated=err_calibrated,
+    )
+
+    print(f"\n== Spatial calibration: {len(net.layers)} layers, "
+          f"{N_SHARDS} shards, caps {CAPS}, link {LINK.rate_bps/1e6:.0f} Mbps ==")
+    print(f"{'layer':10s} {'rows':>4s} {'lax (us)':>9s} {'pallas (us)':>11s} "
+          f"{'GFLOP/s':>8s}")
+    for L in layers:
+        ps = f"{L['pallas_s']*1e6:11.0f}" if L["pallas_s"] else " " * 11
+        print(f"{L['layer']:10s} {L['rows']:4d} {L['lax_s']*1e6:9.0f} {ps} "
+              f"{L['rate']/1e9:8.2f}")
+    for name, ms in makespans.items():
+        print(f"spatial_{name},{ms*1e6:.1f},")
+    print(f"fused over unfused: {fused_speedup:.3f}x ; weighted over equal "
+          f"(skewed mesh): {weighted_speedup:.3f}x")
+    print(f"spatial_fused_speedup,,{fused_speedup:.4f}")
+    print(f"spatial_weighted_speedup,,{weighted_speedup:.4f}")
+    print(f"calibration: nominal err {err_nominal*100:.1f}% -> calibrated err "
+          f"{err_calibrated*100:.1f}% ({len(samples)} samples x3 folds)")
+    print(f"spatial_calib_err,,{err_calibrated:.4f}")
+
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True, default=str)
+        print(f"\nwrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="BENCH_spatial.json")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, out_path=args.out)

@@ -250,6 +250,17 @@ class ComputeRateEstimator(_EwmaRateEstimator):
             raise ValueError(f"need positive flops/elapsed, got {flops}, {elapsed_s}")
         return self._fold(es, flops / elapsed_s)
 
+    def observe_samples(self, samples) -> dict[str, float]:
+        """Fold an iterable of ``(es, flops, elapsed_s)`` samples -- the exact
+        triples the serving executor's timing attribution emits
+        (``run_plan(..., time_observer=...)`` /
+        ``benchmarks/spatial_calibration.py``).  Returns the updated per-ES
+        estimates for the ESs observed."""
+        seen: dict[str, float] = {}
+        for es, flops, elapsed_s in samples:
+            seen[es] = self.observe(es, flops, elapsed_s)
+        return seen
+
     def rate(self, es: str) -> float:
         return self._rates[es]
 

@@ -10,16 +10,47 @@ from .conv2d import conv2d_tiles
 VMEM_BUDGET = 8 * 1024 * 1024  # bytes per grid step we allow ourselves
 
 
-def _pick_tile_h(h: int, w_ext: int, cin: int, cout: int, k: int, itemsize: int):
-    """Largest divisor tile height whose working set fits the VMEM budget."""
-    for th in [t for t in (64, 32, 16, 8, 4, 2, 1) if h % t == 0]:
-        tc = min(cout, 128)
+def _pick_cout_tile(cout: int) -> int:
+    """Largest divisor of ``cout`` that fits one MXU lane tile (<= 128)."""
+    for tc in range(min(cout, 128), 0, -1):
+        if cout % tc == 0:
+            return tc
+    return 1  # pragma: no cover - range above always yields a divisor
+
+
+def _pick_tile_h(
+    h: int, w_ext: int, cin: int, cout: int, k: int, itemsize: int, stride: int = 1
+):
+    """Largest tile height (output rows) whose working set fits the VMEM
+    budget.  Tiles need not divide ``h``: the kernel wrappers zero-pad the
+    final (remainder) tile and slice the surplus rows off, so a prime-height
+    shard no longer collapses to 1-row tiles (nor -- worse -- silently loses
+    its remainder rows; see tests/test_kernels.py)."""
+    for th in (64, 32, 16, 8, 4, 2, 1):
+        if th > max(1, h):
+            continue
+        tc = _pick_cout_tile(cout)
         need = (
-            (th + k - 1) * w_ext * cin + k * k * cin * tc + th * (w_ext - k + 1) * tc
+            ((th - 1) * stride + k) * w_ext * cin
+            + k * k * cin * tc
+            + th * ((w_ext - k) // stride + 1) * tc
         ) * max(itemsize, 4)
         if need <= VMEM_BUDGET:
             return th
     return 1
+
+
+def _tile_rows(x: jax.Array, n_out: int, th: int, k: int, stride: int) -> jax.Array:
+    """Stack overlapping row tiles: tile t covers output rows [t*th, t*th+th),
+    i.e. input rows [t*th*s, t*th*s + (th-1)*s + k).  The input is zero-padded
+    at the bottom so the last tile may overhang (remainder handling)."""
+    nt = -(-n_out // th)  # ceil
+    tile_ext = (th - 1) * stride + k
+    need_rows = (nt - 1) * th * stride + tile_ext
+    if need_rows > x.shape[1]:
+        x = jnp.pad(x, ((0, 0), (0, need_rows - x.shape[1]), (0, 0), (0, 0)))
+    idx = (jnp.arange(nt) * th * stride)[:, None] + jnp.arange(tile_ext)[None]
+    return x[:, idx]  # [N, nT, tile_ext, W_ext, Cin]
 
 
 def conv2d_pallas(
@@ -27,27 +58,27 @@ def conv2d_pallas(
     weights: jax.Array,  # [k, k, Cin, Cout]
     bias: jax.Array | None = None,
     *,
+    stride: int = 1,
     padding: int = 1,
+    groups: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
-    """Stride-1 SAME/VALID conv via the Pallas kernel (k = weights.shape[0])."""
+    """SAME/VALID conv via the Pallas kernel (k = weights.shape[0])."""
     k = weights.shape[0]
     n, h, w, cin = x.shape
     cout = weights.shape[-1]
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
-    h_eff = x.shape[1] - (k - 1)  # output rows
+    h_eff = (x.shape[1] - k) // stride + 1  # output rows
     w_ext = x.shape[2]
-    th = _pick_tile_h(h_eff, w_ext, cin, cout, k, x.dtype.itemsize)
-    nt = h_eff // th
-    # overlapping row tiles: tile t covers padded rows [t*th, t*th + th + k - 1)
-    idx = (jnp.arange(nt) * th)[:, None] + jnp.arange(th + k - 1)[None]
-    x_tiles = x[:, idx]  # [N, nT, TH + k - 1, W_ext, Cin]
-    cout_tile = min(cout, 128)
+    th = _pick_tile_h(h_eff, w_ext, cin, cout, k, x.dtype.itemsize, stride)
+    x_tiles = _tile_rows(x, h_eff, th, k, stride)
+    nt = x_tiles.shape[1]
     y = conv2d_tiles(
-        x_tiles, weights, k=k, tile_h=th, cout_tile=cout_tile, interpret=interpret
+        x_tiles, weights, k=k, tile_h=th, cout_tile=_pick_cout_tile(cout),
+        stride=stride, groups=groups, interpret=interpret,
     )
-    y = y.reshape(n, h_eff, w_ext - (k - 1), cout)
+    y = y.reshape(n, nt * th, (w_ext - k) // stride + 1, cout)[:, :h_eff]
     if bias is not None:
         y = y + bias
     return y

@@ -6,19 +6,36 @@ import jax.numpy as jnp
 
 
 def conv2d_ref(
-    x: jax.Array, weights: jax.Array, bias: jax.Array | None = None, *, padding: int = 1
+    x: jax.Array,
+    weights: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    groups: int = 1,
 ) -> jax.Array:
-    """Stride-1 conv, NHWC x [k,k,Cin,Cout]; sum of shifted einsums."""
+    """NHWC x [k,k,Cin,Cout] conv; sum of shifted (strided) einsums.
+    ``groups > 1`` is the depthwise case (weights [k, k, 1, C])."""
     k = weights.shape[0]
+    s = stride
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     n, h, w, cin = x.shape
-    ho, wo = h - (k - 1), w - (k - 1)
+    ho, wo = (h - k) // s + 1, (w - k) // s + 1
+    if groups > 1 and not (groups == cin == weights.shape[-1] and weights.shape[2] == 1):
+        raise ValueError(f"only depthwise groups supported, got groups={groups}")
     acc = jnp.zeros((n, ho, wo, weights.shape[-1]), jnp.float32)
     for ky in range(k):
         for kx in range(k):
-            patch = x[:, ky : ky + ho, kx : kx + wo, :].astype(jnp.float32)
-            acc = acc + jnp.einsum("nhwc,cd->nhwd", patch, weights[ky, kx].astype(jnp.float32))
+            patch = x[
+                :, ky : ky + (ho - 1) * s + 1 : s, kx : kx + (wo - 1) * s + 1 : s, :
+            ].astype(jnp.float32)
+            if groups > 1:
+                acc = acc + patch * weights[ky, kx, 0].astype(jnp.float32)
+            else:
+                acc = acc + jnp.einsum(
+                    "nhwc,cd->nhwd", patch, weights[ky, kx].astype(jnp.float32)
+                )
     if bias is not None:
         acc = acc + bias
     return acc.astype(x.dtype)

@@ -8,7 +8,15 @@ instead assembles only the *boundary row tiles* from the halos and feeds one
 shard.  That is HALP's schedule at kernel granularity: interior compute is
 independent of the halos, so XLA's latency-hiding scheduler overlaps the
 ppermute with the interior matmuls, and the boundary tiles are the only
-consumers of remote data.
+consumers of remote data (paper eqs. 9-15; docs/equations.md maps the
+correspondence).
+
+Geometry: for stride ``s`` the aligned-shard halos satisfy
+``lo + hi == k - s`` (``lo = p`` rows from above, ``hi = k - p - s`` from
+below -- the exact eq. 8-9 arithmetic), and the shard height must be a
+stride multiple.  Shard heights need *not* be tile multiples: the final tile
+overhangs into zero padding and the surplus output rows are sliced off
+(previously ``nt = hs // th`` silently dropped the remainder rows).
 """
 from __future__ import annotations
 
@@ -16,26 +24,40 @@ import jax
 import jax.numpy as jnp
 
 from ..conv2d.conv2d import conv2d_tiles
-from ..conv2d.ops import _pick_tile_h
+from ..conv2d.ops import _pick_cout_tile, _pick_tile_h
 
 
 def halo_conv2d(
     x_shard: jax.Array,  # [B, Hs, W, C]
     top_halo: jax.Array | None,  # [B, lo, W, C] (already width-aligned with x)
     bot_halo: jax.Array | None,  # [B, hi, W, C]
-    weights: jax.Array,  # [k, k, Cin, Cout]
+    weights: jax.Array,  # [k, k, Cin, Cout] ([k, k, 1, C] depthwise)
     bias: jax.Array | None = None,
     *,
+    stride: int = 1,
     padding: int = 1,
+    groups: int = 1,
+    tile_h: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Stride-1 conv over a height shard with explicit halos; returns the
-    shard's [B, Hs, W_out, Cout] output rows."""
+    """Conv over a height shard with explicit halos; returns the shard's
+    [B, Hs // stride, W_out, Cout] output rows.
+
+    ``tile_h`` overrides the VMEM-driven tile-height heuristic (tests use it
+    to pin the remainder-tile path)."""
     k = weights.shape[0]
+    s = stride
     lo = 0 if top_halo is None else top_halo.shape[1]
     hi = 0 if bot_halo is None else bot_halo.shape[1]
-    assert lo + hi == k - 1, "halos must cover the receptive field"
+    if lo + hi != k - s:
+        raise ValueError(
+            f"halos must cover the receptive field: need lo + hi == k - s "
+            f"(= {k - s}), got lo={lo} hi={hi} for k={k} stride={s}"
+        )
     b, hs, w, cin = x_shard.shape
+    if hs % s:
+        raise ValueError(f"shard rows {hs} not divisible by stride {s}")
+    n_out = hs // s
     cout = weights.shape[-1]
 
     def wpad(a):
@@ -43,48 +65,50 @@ def halo_conv2d(
 
     x = wpad(x_shard)
     w_ext = x.shape[2]
-    th = _pick_tile_h(hs, w_ext, cin, cout, k, x.dtype.itemsize)
-    nt = hs // th
+    th = tile_h or _pick_tile_h(n_out, w_ext, cin, cout, k, x.dtype.itemsize, s)
+    th = max(1, min(th, n_out))
+    nt = -(-n_out // th)  # ceil: the last tile may overhang into zero padding
+    tile_ext = (th - 1) * s + k
+    ext_h = lo + hs + hi
 
-    # interior tiles (no halo dependence) gather straight from the shard;
-    # boundary tiles splice in the halo rows.  Tile t covers extended rows
-    # [t*th - lo, t*th + th + hi) where extended row r maps to: top halo for
-    # r < 0, shard row r for 0 <= r < hs, bottom halo for r >= hs.
-    top_ext = wpad(top_halo) if top_halo is not None else None
-    bot_ext = wpad(bot_halo) if bot_halo is not None else None
+    # Interior tiles (no halo dependence) gather straight from the shard;
+    # boundary tiles splice in the halo rows; overhang rows of the final
+    # (remainder) tile are zeros.  In *extended* coordinates -- row e is the
+    # top halo for e < lo, shard row e - lo for lo <= e < lo + Hs, the bottom
+    # halo up to ext_h -- output row r reads ext rows [r*s, r*s + k), so tile
+    # t covers ext rows [t*th*s, t*th*s + tile_ext).
+    top_ext = wpad(top_halo) if lo else None
+    bot_ext = wpad(bot_halo) if hi else None
 
-    def rows(lo_r: int, hi_r: int):  # extended rows [lo_r, hi_r)
+    def rows(e0: int, e1: int):  # extended rows [e0, e1)
         pieces = []
-        if lo_r < 0:
-            seg = (
-                top_ext[:, lo + lo_r : lo + min(hi_r, 0)]
-                if top_ext is not None
-                else jnp.zeros((b, min(hi_r, 0) - lo_r, w_ext, cin), x.dtype)
+        if e0 < lo:
+            pieces.append(top_ext[:, e0 : min(e1, lo)])
+        m0, m1 = max(e0, lo), min(e1, lo + hs)
+        if m1 > m0:
+            pieces.append(x[:, m0 - lo : m1 - lo])
+        b0, b1 = max(e0, lo + hs), min(e1, ext_h)
+        if b1 > b0:
+            pieces.append(bot_ext[:, b0 - lo - hs : b1 - lo - hs])
+        if e1 > max(e0, ext_h):  # remainder-tile overhang: zero padding
+            pieces.append(
+                jnp.zeros((b, e1 - max(e0, ext_h), w_ext, cin), x.dtype)
             )
-            pieces.append(seg)
-        mid_lo, mid_hi = max(lo_r, 0), min(hi_r, hs)
-        if mid_hi > mid_lo:
-            pieces.append(x[:, mid_lo:mid_hi])
-        if hi_r > hs:
-            seg = (
-                bot_ext[:, max(lo_r, hs) - hs : hi_r - hs]
-                if bot_ext is not None
-                else jnp.zeros((b, hi_r - max(lo_r, hs), w_ext, cin), x.dtype)
-            )
-            pieces.append(seg)
         return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
 
-    tiles = [rows(t * th - lo, t * th + th + hi) for t in range(nt)]
-    x_tiles = jnp.stack(tiles, axis=1)  # [B, nT, TH + k - 1, W_ext, C]
+    tiles = [rows(t * th * s, t * th * s + tile_ext) for t in range(nt)]
+    x_tiles = jnp.stack(tiles, axis=1)  # [B, nT, tile_ext, W_ext, C]
     y = conv2d_tiles(
         x_tiles,
         weights,
         k=k,
         tile_h=th,
-        cout_tile=min(cout, 128),
+        cout_tile=_pick_cout_tile(cout),
+        stride=s,
+        groups=groups,
         interpret=interpret,
     )
-    y = y.reshape(b, hs, w_ext - (k - 1), cout)
+    y = y.reshape(b, nt * th, (w_ext - k) // s + 1, cout)[:, :n_out]
     if bias is not None:
         y = y + bias
     return y

@@ -1,4 +1,9 @@
-"""shard_map-level wrapper: ppermute halos + the HALP-fused Pallas conv."""
+"""shard_map-level wrapper: ppermute halos + the HALP-fused Pallas conv.
+
+``repro.spatial.halo.conv2d_spatial(engine="pallas")`` is the deployed entry
+point (it adds capacity-weighted shards and the lax fallback); this wrapper
+stays as the minimal kernels-level form for equal shards.
+"""
 from __future__ import annotations
 
 import jax
@@ -13,23 +18,23 @@ def conv2d_spatial_pallas(
     weights: jax.Array,
     bias=None,
     *,
+    stride: int = 1,
     padding: int = 1,
+    groups: int = 1,
     axis_name: str = "sp",
     interpret: bool = False,
 ) -> jax.Array:
-    """Drop-in for repro.spatial.halo.conv2d_spatial (k = weights k, s=1) with
+    """Drop-in for repro.spatial.halo.conv2d_spatial (k = weights k) with
     the Pallas kernel as the compute body."""
     k = weights.shape[0]
-    lo, hi = padding, k - 1 - padding
+    lo, hi = padding, k - padding - stride
     n = lax.psum(1, axis_name)
-    idx = lax.axis_index(axis_name)
     top = bot = None
-    if lo:
-        top = lax.ppermute(x[:, -lo:], axis_name, [(i, (i + 1) % n) for i in range(n)])
-        top = jnp.where(idx == 0, jnp.zeros_like(top), top)
-    if hi:
-        bot = lax.ppermute(x[:, :hi], axis_name, [(i, (i - 1) % n) for i in range(n)])
-        bot = jnp.where(idx == n - 1, jnp.zeros_like(bot), bot)
+    if lo > 0:
+        top = lax.ppermute(x[:, -lo:], axis_name, [(i, i + 1) for i in range(n - 1)])
+    if hi > 0:
+        bot = lax.ppermute(x[:, :hi], axis_name, [(i, i - 1) for i in range(1, n)])
     return halo_conv2d(
-        x, top, bot, weights, bias, padding=padding, interpret=interpret
+        x, top, bot, weights, bias, stride=stride, padding=padding,
+        groups=groups, interpret=interpret,
     )

@@ -7,12 +7,13 @@ import jax.numpy as jnp
 from ..conv2d.ref import conv2d_ref
 
 
-def halo_conv2d_ref(x_shard, top_halo, bot_halo, weights, bias=None, *, padding=1):
+def halo_conv2d_ref(
+    x_shard, top_halo, bot_halo, weights, bias=None, *, stride=1, padding=1, groups=1
+):
     parts = [p for p in (top_halo, x_shard, bot_halo) if p is not None]
     ext = jnp.concatenate(parts, axis=1) if len(parts) > 1 else x_shard
     # height is already extended by the halos; only pad width
-    k = weights.shape[0]
     if padding:
         ext = jnp.pad(ext, ((0, 0), (0, 0), (padding, padding), (0, 0)))
-    y = conv2d_ref(ext, weights, bias, padding=0)
+    y = conv2d_ref(ext, weights, bias, stride=stride, padding=0, groups=groups)
     return y

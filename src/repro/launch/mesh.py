@@ -5,7 +5,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "mesh_axes", "dp_axes", "fsdp_axes"]
+__all__ = [
+    "make_production_mesh",
+    "make_spatial_mesh",
+    "mesh_axes",
+    "dp_axes",
+    "fsdp_axes",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,6 +19,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_spatial_mesh(n: int | None = None, *, axis: str = "sp"):
+    """1-D mesh over the image-height axis for the HALP spatial executor
+    (``repro.spatial``): ``n`` devices (default: all local devices) along a
+    single ``"sp"`` axis.  Capacity-weighted deployments keep this equal-block
+    mesh and encode the skew in the padded shard layout
+    (``repro.spatial.halo.shard_heights``)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
 
 
 def mesh_axes(mesh) -> tuple[str, ...]:

@@ -1,1 +1,8 @@
-from .sharding import input_shardings, param_shardings, shard_rules, state_shardings
+from .sharding import (
+    input_shardings,
+    param_shardings,
+    shard_rules,
+    spatial_shardings,
+    state_shardings,
+    weighted_spatial_inputs,
+)

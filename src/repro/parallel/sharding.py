@@ -26,7 +26,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs.base import Arch, Cell
 from ..launch.mesh import dp_axes, fsdp_axes
 
-__all__ = ["param_shardings", "input_shardings", "state_shardings", "shard_rules"]
+__all__ = [
+    "param_shardings",
+    "input_shardings",
+    "state_shardings",
+    "shard_rules",
+    "spatial_shardings",
+    "weighted_spatial_inputs",
+]
 
 M = "model"
 
@@ -185,7 +192,10 @@ def input_shardings(bundle_inputs, arch: Arch, cell: Cell, mesh: Mesh):
     multi = "pod" in mesh.axis_names
     out = {}
     for name, spec in bundle_inputs.items():
-        if name in ("tokens", "labels") and arch.family == "lm":
+        if name == "images" and "sp" in mesh.axis_names:
+            # dedicated spatial mesh (make_spatial_mesh): height over "sp"
+            sh = NamedSharding(mesh, P(None, "sp", None, None))
+        elif name in ("tokens", "labels") and arch.family == "lm":
             b = spec.shape[0]
             tok = dp if b % _axis_size(mesh, dp) == 0 else "data"
             sh = NamedSharding(mesh, P(tok, *([None] * (len(spec.shape) - 1))))
@@ -231,6 +241,41 @@ def input_shardings(bundle_inputs, arch: Arch, cell: Cell, mesh: Mesh):
             )
         out[name] = sh
     return out
+
+
+def spatial_shardings(mesh: Mesh, *, axis: str = "sp"):
+    """(activation, param) NamedShardings for the HALP spatial executor:
+    activations [B, H(or n*Hmax padded), W, C] height-sharded over ``axis``,
+    params replicated.  Works for both the equal split and the
+    capacity-weighted padded layout (which keeps equal per-device blocks)."""
+    return (
+        NamedSharding(mesh, P(None, axis, None, None)),
+        NamedSharding(mesh, P()),
+    )
+
+
+def weighted_spatial_inputs(x, plan_or_heights, mesh: Mesh, *, axis: str = "sp",
+                            align: int = 1):
+    """Lay a global image batch out for the capacity-weighted spatial executor.
+
+    ``plan_or_heights`` is either an N-way ``plan_even(ratios=...)`` HALPPlan
+    (its first-layer row shares become the shard heights, re-quantised to
+    ``align`` -- pass ``spatial_alignment(net)``) or an explicit height tuple.
+    Returns ``(x_padded_sharded, heights)``: the padded equal-block layout the
+    weighted ``conv2d_spatial(heights=...)`` ops expect, placed with the
+    height sharding over ``axis``."""
+    from ..spatial.halo import plan_shard_heights, to_padded_shards
+
+    if hasattr(plan_or_heights, "parts"):
+        heights = plan_shard_heights(plan_or_heights, align)
+    else:
+        heights = tuple(int(h) for h in plan_or_heights)
+    n = mesh.shape[axis]
+    if len(heights) != n:
+        raise ValueError(f"{len(heights)} shard heights for a {n}-way {axis!r} axis")
+    xp = to_padded_shards(x, heights)
+    act_sh, _ = spatial_shardings(mesh, axis=axis)
+    return jax.device_put(xp, act_sh), heights
 
 
 def _cache_spec(shape, mesh: Mesh) -> P:

@@ -1,5 +1,15 @@
 """TPU-native spatial parallelism: the paper's receptive-field partitioning as a
 shard_map halo-exchange engine (deployment form) plus a single-device plan
 executor (semantic model, used for losslessness proofs)."""
-from .halo import conv2d_spatial, exchange_halos, halo_sizes, max_pool_spatial
+from .halo import (
+    conv2d_spatial,
+    exchange_halos,
+    halo_sizes,
+    max_pool_spatial,
+    merge_padded_shards,
+    plan_shard_heights,
+    shard_heights,
+    spatial_alignment,
+    to_padded_shards,
+)
 from .partition_apply import run_plan, segment_forward

@@ -23,6 +23,9 @@ deployment form lives in ``repro.spatial.halo``.
 """
 from __future__ import annotations
 
+import time
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
 
@@ -64,12 +67,23 @@ def run_plan(
     layer_params: list,
     apply_layer,
     x: jax.Array,
+    time_observer: Callable[[str, float, float], None] | None = None,
 ) -> jax.Array:
     """Run the full plan; returns the merged final feature map (host side).
 
     ``apply_layer(params, geom, x_slice)`` must be the VALID-padding layer
     primitive (``repro.models.vgg.apply_layer`` or compatible).
-    """
+
+    ``time_observer(es, flops, elapsed_s)``: zero-config per-ES timing
+    attribution.  When set, every ES's segments are executed synchronously
+    (``block_until_ready``) and, once per call, the observer receives that
+    ES's total FLOP count (exact row algebra via ``net.layer_flops``) and
+    measured wall-clock -- the ``(es, flops, elapsed)`` sample
+    :meth:`~repro.runtime.serve.BatchingEngine.observe_es_time` /
+    :class:`~repro.core.replan.ComputeRateEstimator` expect, with no manual
+    bookkeeping in the serving executor.  Timing requires eager per-segment
+    execution, so do not wrap the whole ``run_plan`` in ``jax.jit`` when
+    observing (jit ``apply_layer`` instead to keep the kernels compiled)."""
     net: ConvNetGeom = plan.net
     sizes = net.sizes()
     es_names = plan.es_names
@@ -80,20 +94,27 @@ def run_plan(
         seg = plan.parts[0].inp[es]
         avail[es] = (seg, x[:, seg.lo - 1 : seg.hi])
 
+    flops_acc = {es: 0.0 for es in es_names}
+    secs_acc = {es: 0.0 for es in es_names}
+
     outs: dict[str, jax.Array] = {}
     for i, g in enumerate(net.layers):
         part = plan.parts[i]
-        outs = {
-            es: (
-                segment_forward(
-                    apply_layer, layer_params[i], g, avail[es][1], part.out[es],
-                    avail[es][0], sizes[i],
-                )
-                if part.out[es]
-                else None
+        outs = {}
+        for es in es_names:
+            if not part.out[es]:
+                outs[es] = None
+                continue
+            t0 = time.perf_counter() if time_observer else 0.0
+            y = segment_forward(
+                apply_layer, layer_params[i], g, avail[es][1], part.out[es],
+                avail[es][0], sizes[i],
             )
-            for es in es_names
-        }
+            if time_observer:
+                jax.block_until_ready(y)
+                secs_acc[es] += time.perf_counter() - t0
+                flops_acc[es] += net.layer_flops(i, part.out[es].rows)
+            outs[es] = y
         if i + 1 == len(net.layers):
             break
         # message exchange: every ES's next-layer input = own rows + messages
@@ -119,6 +140,11 @@ def run_plan(
             seg_all = Segment(pieces[0][0].lo, pieces[-1][0].hi)
             new_avail[dst] = (seg_all, jnp.concatenate([t[1] for t in pieces], axis=1))
         avail = new_avail
+
+    if time_observer:
+        for es in es_names:
+            if flops_acc[es] > 0 and secs_acc[es] > 0:
+                time_observer(es, flops_acc[es], secs_acc[es])
 
     # final merge on the host (paper: sub-outputs -> FL input)
     ordered = sorted(es_names, key=lambda es: plan.parts[-1].out[es].lo)

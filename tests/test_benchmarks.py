@@ -104,6 +104,32 @@ def test_straggler_sweep_acceptance():
     assert out["plans_verified_lossless"] == 3
 
 
+def test_spatial_calibration_acceptance():
+    """Measured-kernel schedule composition must show the fused kernel's halo
+    overlap winning over the unfused exchange-then-compute schedule, the
+    capacity-weighted split winning over the equal split on the skewed mesh,
+    and the measured (es, flops, elapsed) samples -- round-tripped through
+    ComputeRateEstimator -- must pull the DES prediction error far below the
+    nominal-rate prediction."""
+    from benchmarks import spatial_calibration
+
+    out = spatial_calibration.run_all(smoke=True, out_path=None)
+    # fused hides the halo latency behind interior compute: strictly faster
+    assert out["fused_speedup"] >= 1.02, out["fused_speedup"]
+    # weighted split keeps the slow shard from straggling (caps 1.0..0.35)
+    assert out["weighted_speedup"] >= 1.2, out["weighted_speedup"]
+    assert sum(out["weighted_heights"]) == sum(out["equal_heights"])
+    assert max(out["weighted_heights"]) > max(out["equal_heights"])
+    # every conv layer was actually executed and timed on both engines
+    convs = [L for L in out["layers"] if L["kind"] != "pool"]
+    assert convs and all(L["lax_s"] > 0 and L["pallas_s"] > 0 for L in convs)
+    # calibration: measured samples through ComputeRateEstimator must beat
+    # the (deliberately wrong) nominal rates by a wide margin
+    assert out["err_calibrated"] < 0.5 * out["err_nominal"], (
+        out["err_calibrated"], out["err_nominal"])
+    assert out["err_calibrated"] < 0.35, out["err_calibrated"]
+
+
 def test_multitask_placement_acceptance():
     """Per-task heterogeneous placement must strictly beat the paper's
     shared-plan deployment on the same shared-contention DES -- mean per-task

@@ -160,6 +160,92 @@ def test_halo_conv_matches_ref(k, pad, dtype):
     )
 
 
+STRIDED_CASES = [
+    # (N, H, W, Cin, Cout, k, stride, pad)
+    (1, 16, 16, 8, 16, 3, 2, 1),
+    (1, 64, 64, 3, 16, 7, 2, 3),  # ResNet/EfficientNet stem
+    (2, 32, 32, 4, 8, 2, 2, 0),   # pool-like conv
+    (1, 20, 20, 8, 16, 5, 2, 2),
+    (1, 17, 13, 3, 8, 3, 2, 1),   # odd sizes, strided
+]
+
+
+@pytest.mark.parametrize("case", STRIDED_CASES)
+def test_conv2d_kernel_strided(case):
+    n, h, w, cin, cout, k, s, pad = case
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (n, h, w, cin))
+    wts = 0.1 * jax.random.normal(kw, (k, k, cin, cout))
+    got = conv2d_pallas(x, wts, stride=s, padding=pad, interpret=True)
+    want = conv2d_ref(x, wts, stride=s, padding=pad)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("k,stride", [(3, 1), (7, 1), (3, 2)])
+def test_conv2d_kernel_depthwise(k, stride):
+    """Depthwise path (groups == cin == cout): VPU mul-add, no MXU matmul."""
+    c, pad = 8, k // 2
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (1, 24, 20, c))
+    wts = 0.1 * jax.random.normal(kw, (k, k, 1, c))
+    got = conv2d_pallas(x, wts, stride=stride, padding=pad, groups=c, interpret=True)
+    want = conv2d_ref(x, wts, stride=stride, padding=pad, groups=c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_conv2d_kernel_rejects_grouped_non_depthwise():
+    x = jnp.zeros((1, 8, 8, 8))
+    wts = jnp.zeros((3, 3, 4, 8))  # groups=2: neither dense nor depthwise
+    with pytest.raises(ValueError, match="depthwise"):
+        conv2d_pallas(x, wts, padding=1, groups=2, interpret=True)
+
+
+@pytest.mark.parametrize("k,stride,pad", [(3, 1, 1), (5, 1, 2), (3, 2, 1), (5, 2, 3), (7, 2, 3)])
+def test_halo_conv_stride_sweep(k, stride, pad):
+    """Acceptance sweep: fused kernel vs concat-then-conv oracle for k in
+    {3,5,7}, stride in {1,2} with exact halos lo + hi == k - s."""
+    b, hs, w, cin, cout = 1, 16, 11, 4, 8
+    lo, hi = pad, k - pad - stride
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(keys[0], (b, hs, w, cin))
+    top = jax.random.normal(keys[1], (b, lo, w, cin)) if lo else None
+    bot = jax.random.normal(keys[2], (b, hi, w, cin)) if hi else None
+    wts = 0.1 * jax.random.normal(keys[3], (k, k, cin, cout))
+    got = halo_conv2d(x, top, bot, wts, stride=stride, padding=pad, interpret=True)
+    want = halo_conv2d_ref(x, top, bot, wts, stride=stride, padding=pad)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("hs,tile_h", [(10, 4), (16, 6), (7, 3)])
+def test_halo_conv_remainder_tiles(hs, tile_h):
+    """Regression pin: hs % tile_h != 0 must NOT drop the remainder rows.
+
+    The pre-fix tiling used ``nt = hs // th``, silently truncating the shard's
+    output; the ceil-tiling path must produce every row, bit-close to the
+    oracle."""
+    assert hs % tile_h != 0  # the case under test
+    b, w, cin, cout, k, pad = 1, 9, 4, 8, 3, 1
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(keys[0], (b, hs, w, cin))
+    top = jax.random.normal(keys[1], (b, pad, w, cin))
+    bot = jax.random.normal(keys[2], (b, k - 1 - pad, w, cin))
+    wts = 0.1 * jax.random.normal(keys[3], (k, k, cin, cout))
+    got = halo_conv2d(x, top, bot, wts, padding=pad, tile_h=tile_h, interpret=True)
+    want = halo_conv2d_ref(x, top, bot, wts, padding=pad)
+    assert got.shape[1] == hs, got.shape  # every output row present
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_halo_conv_rejects_inexact_halos():
+    x = jnp.zeros((1, 8, 8, 4))
+    wts = jnp.zeros((3, 3, 4, 8))
+    with pytest.raises(ValueError, match="lo \\+ hi"):
+        halo_conv2d(x, jnp.zeros((1, 1, 8, 4)), jnp.zeros((1, 2, 8, 4)), wts,
+                    padding=1, interpret=True)
+
+
 def test_halo_conv_equals_unsharded_conv():
     """Two half-shards with exchanged halos == one unsharded conv (HALP
     losslessness at kernel level)."""

@@ -160,6 +160,116 @@ def test_exchange_halos_rejects_thin_shards():
         conv2d_spatial(x, params, k=7, s=1, p=3, overlap=True)
 
 
+def test_shard_heights_weighted_split():
+    from repro.spatial import shard_heights
+
+    # equal default, exact
+    assert shard_heights(64, 4) == (16, 16, 16, 16)
+    # capacity-weighted, stride-aligned, sums preserved
+    hts = shard_heights(64, 4, ratios=(1.0, 0.55, 0.35, 0.8), align=8)
+    assert sum(hts) == 64 and all(h % 8 == 0 for h in hts)
+    assert max(hts) > min(hts) >= 8  # genuinely skewed, every shard non-empty
+    # heavier ratio never gets fewer rows
+    hts2 = shard_heights(60, 3, ratios=(3, 2, 1), align=2)
+    assert sum(hts2) == 60 and hts2[0] >= hts2[1] >= hts2[2]
+    with pytest.raises(ValueError, match="not divisible"):
+        shard_heights(62, 4, align=4)
+    with pytest.raises(ValueError, match="at least"):
+        shard_heights(16, 5, align=8)  # 2 units cannot feed 5 shards
+    with pytest.raises(ValueError, match="one ratio per shard"):
+        shard_heights(64, 4, ratios=(1, 2))
+    with pytest.raises(ValueError, match="non-negative"):
+        shard_heights(64, 2, ratios=(-1, 2))
+
+
+def test_padded_shard_layout_roundtrip():
+    from repro.spatial import merge_padded_shards, to_padded_shards
+
+    hts = (12, 8, 4, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 5, 3))
+    xp = to_padded_shards(x, hts)
+    assert xp.shape == (2, 4 * 12, 5, 3)
+    # invariant: rows past each shard's valid height are zero
+    for j, h in enumerate(hts):
+        blk = np.asarray(xp[:, j * 12 : (j + 1) * 12])
+        np.testing.assert_array_equal(blk[:, h:], 0.0)
+        np.testing.assert_array_equal(blk[:, :h], np.asarray(x[:, sum(hts[:j]) : sum(hts[:j]) + h]))
+    np.testing.assert_array_equal(np.asarray(merge_padded_shards(xp, hts)), np.asarray(x))
+    with pytest.raises(ValueError, match="sum of shard heights"):
+        to_padded_shards(x, (12, 8, 4, 4))
+    with pytest.raises(ValueError, match="blocks of"):
+        merge_padded_shards(xp[:, :-1], hts)
+
+
+def test_plan_shard_heights_consumes_weighted_plan():
+    """The spatial engine consumes plan_even(ratios=...): the plan's
+    first-layer row shares become the deployment's shard heights, re-quantised
+    to the net's stride alignment."""
+    from repro.spatial import plan_shard_heights, shard_heights, spatial_alignment
+
+    net = CFG.geom()
+    align = spatial_alignment(net)
+    assert align == 32  # five 2x2 pools
+    net3 = vgg.VGGConfig(
+        img_res=64, width_mult=0.125, num_classes=10,
+        blocks=((2, 64), (2, 128), (3, 256)),
+    ).geom()
+    align3 = spatial_alignment(net3)
+    assert align3 == 8
+    plan = plan_even(net3, 4, ratios=(4.0, 2.0, 1.0, 1.0))
+    hts = plan_shard_heights(plan, align=align3)
+    assert sum(hts) == net3.in_rows and all(h % align3 == 0 for h in hts)
+    assert hts[0] >= hts[1] >= hts[2]  # follows the plan's capacity weighting
+    # equal plan degenerates to the equal split
+    assert plan_shard_heights(plan_even(net3, 4), align=align3) == (16, 16, 16, 16)
+    # and the ratios round-trip through the same quantiser
+    assert hts == shard_heights(net3.in_rows, 4, ratios=[
+        plan.parts[0].out[es].rows for es in plan.es_names], align=align3)
+
+
+def test_weighted_conv_rejects_bad_heights():
+    from repro.models.common import conv_params
+    from repro.spatial import conv2d_spatial
+
+    params = conv_params(jax.random.PRNGKey(0), 3, 3, 4)
+    x = jnp.zeros((1, 8, 8, 3))
+    with pytest.raises(ValueError, match="not all divisible by stride"):
+        conv2d_spatial(x, params, k=3, s=2, p=1, heights=(8, 7, 8, 8))
+    with pytest.raises(ValueError, match="halo exceeds shard height"):
+        conv2d_spatial(x, params, k=7, s=1, p=3, heights=(8, 2, 8, 8))
+    with pytest.raises(ValueError, match="positive"):
+        conv2d_spatial(x, params, k=3, s=1, p=1, heights=(8, 0, 8, 8))
+
+
+def test_run_plan_time_observer_attribution(vgg_setup):
+    """Zero-config serve-side timing attribution: run_plan emits one
+    (es, flops, elapsed) sample per ES whose FLOP counts match the plan's
+    exact row algebra, and the samples round-trip through
+    ComputeRateEstimator.observe_samples."""
+    from repro.core.replan import ComputeRateEstimator
+
+    params, x, ref = vgg_setup
+    net = CFG.geom()
+    plan = plan_even(net, 3, ratios=(0.5, 0.3, 0.2))
+    samples = []
+    out = run_plan(plan, params["features"], vgg.apply_layer, x,
+                   time_observer=lambda es, fl, dt: samples.append((es, fl, dt)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+    assert sorted(es for es, _, _ in samples) == sorted(plan.es_names)
+    for es, fl, dt in samples:
+        want_fl = sum(
+            net.layer_flops(i, plan.parts[i].out[es].rows)
+            for i in range(len(net.layers)) if plan.parts[i].out[es]
+        )
+        assert fl == pytest.approx(want_fl)  # exact row algebra, not a guess
+        assert dt > 0
+    est = ComputeRateEstimator({es: 1e9 for es in plan.es_names})
+    rates = est.observe_samples(samples)
+    for es, fl, dt in samples:
+        assert rates[es] == pytest.approx(est.rate(es))
+        assert est.rate(es) > 0
+
+
 def test_spmd_halo_exchange_multidevice():
     """Run the shard_map halo-exchange suite on 8 forced host devices."""
     script = os.path.join(os.path.dirname(__file__), "spatial_multidev_impl.py")
