@@ -25,7 +25,13 @@ from .placement import (
     shared_plan_placement,
     simulate_placement,
 )
-from .reliability import OffloadChannel, rate_fluctuation, service_reliability
+from .reliability import (
+    OffloadChannel,
+    probit,
+    rate_fluctuation,
+    required_slack,
+    service_reliability,
+)
 from .replan import (
     ComputeRateEstimator,
     LinkRateEstimator,
@@ -64,6 +70,7 @@ from .simulator import (
     enhanced_modnn_delay,
     replay_rate_trace,
     replay_trace,
+    serve_latency_table,
     simulate_halp,
     simulate_modnn,
 )

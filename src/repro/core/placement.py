@@ -547,7 +547,7 @@ class PlacementController(ReplanController):
 
     # -- serving integration --------------------------------------------------
 
-    def _raw_predicted_latency(self, batch_size: int) -> float:
+    def _price_batch(self, batch_size: int) -> float:
         placement = self._active_result().placement
         plans = [placement.plans[t % placement.n_tasks] for t in range(batch_size)]
         sim = Sim()

@@ -20,7 +20,14 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-__all__ = ["phi", "OffloadChannel", "service_reliability", "rate_fluctuation"]
+__all__ = [
+    "phi",
+    "probit",
+    "OffloadChannel",
+    "service_reliability",
+    "rate_fluctuation",
+    "required_slack",
+]
 
 IMAGE_BYTES = 125_000  # paper: "each input image of 125 KBytes"
 
@@ -56,3 +63,41 @@ def rate_fluctuation(ch: OffloadChannel) -> float:
     """phi (Mbps-style fluctuation) via the 3-sigma rule: the nominal rate minus
     the effective rate when the offload takes mu + 3 sigma."""
     return ch.rate_bps - ch.batch_bits / (ch.mu_s + 3.0 * ch.sigma_s)
+
+
+def probit(p: float) -> float:
+    """Inverse standard normal CDF (quantile), ``phi(probit(p)) == p``.
+
+    Solved by bisection on :func:`phi` -- monotone, branch-free of special
+    cases, and accurate to ~1e-12 over the targets admission control uses
+    (0.9 .. 0.999999); the stdlib has ``erf`` but no ``erfinv``, and pulling
+    in scipy for one quantile is not worth a dependency."""
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"p must be in (0, 1), got {p}")
+    lo, hi = -9.0, 9.0  # phi saturates to 0/1 in float64 well inside +-9
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if phi(mid) < p:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def required_slack(ch: OffloadChannel, t_inf_s: float, target: float) -> float:
+    """The smallest deadline slack at which a batch still clears ``target``:
+    the §V.D reliability integral *inverted* into an admission threshold.
+
+    ``service_reliability(ch, t_inf, D) >= target``  iff
+    ``D >= mu + t_inf + sigma * probit(target)`` (for ``sigma > 0``; a
+    deterministic channel degenerates to ``mu + t_inf``).  Admission control
+    over a request stream uses this form: per deadline class the threshold is
+    one precomputed number per batch size, so admitting or shedding a request
+    with remaining slack ``deadline - now`` is a single comparison instead of
+    a reliability evaluation -- what makes §V.D's policy affordable at
+    millions of requests (see ``repro.runtime.serve.serve_trace``)."""
+    if not 0.0 < target < 1.0:
+        raise ValueError(f"target must be in (0, 1), got {target}")
+    if ch.sigma_s <= 0:
+        return ch.mu_s + t_inf_s
+    return ch.mu_s + t_inf_s + ch.sigma_s * probit(target)

@@ -80,6 +80,8 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Mapping
 
+import numpy as np
+
 from .nets import ConvNetGeom
 from .optimizer import OptimizeResult, optimize_plan
 from .partition import HALPPlan
@@ -485,6 +487,10 @@ class ReplanController:
         self.replans = 0  # adopted bucket switches
         self.optimizer_calls = 0
         self._calibration = 1.0  # measured/predicted latency EWMA (serving)
+        # (fingerprint, active key, batch) -> raw predicted latency; the
+        # serving loop prices whole latency *tables* per operating point, so
+        # repeat pricing of the same point must be a dict hit
+        self._latency_memo: dict[tuple, float] = {}
 
     # -- bucketing ------------------------------------------------------------
 
@@ -611,7 +617,10 @@ class ReplanController:
 
     # -- serving integration --------------------------------------------------
 
-    def _raw_predicted_latency(self, batch_size: int) -> float:
+    def _price_batch(self, batch_size: int) -> float:
+        """Price the active operating point at ``batch_size`` concurrent
+        tasks (closed form here; :class:`~repro.core.placement.\
+PlacementController` overrides with the shared-secondary multi-task DES)."""
         return halp_closed_form(
             self.net,
             topology=self.estimated_topology(),
@@ -619,11 +628,31 @@ class ReplanController:
             n_tasks=batch_size,
         )["total"]
 
+    def _raw_predicted_latency(self, batch_size: int) -> float:
+        """Memoised :meth:`_price_batch`: pure in (fingerprint, active bucket
+        key, batch size), because ``estimated_topology`` and the active plan
+        are both functions of the active key alone."""
+        key = (self._fingerprint, self._active, batch_size)
+        hit = self._latency_memo.get(key)
+        if hit is None:
+            hit = self._price_batch(batch_size)
+            self._latency_memo[key] = hit
+        return hit
+
     def predicted_latency(self, batch_size: int) -> float:
         """Closed-form makespan of the *current* plan for a batch of
         ``batch_size`` tasks, scaled by the measured-latency calibration --
         the latency model ``choose_batch_size`` admits batches against."""
         return self._raw_predicted_latency(batch_size) * self._calibration
+
+    def latency_table(self, max_batch: int) -> np.ndarray:
+        """The calibrated latency curve ``table[b-1] = predicted_latency(b)``
+        for ``b = 1..max_batch`` -- one ready-made ``lat_table`` row for
+        ``repro.runtime.serve.serve_trace``, priced at the controller's
+        current operating point (re-extract after a bucket switch)."""
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        return np.array([self.predicted_latency(b) for b in range(1, max_batch + 1)])
 
     def observe_batch_latency(self, batch_size: int, elapsed_s: float) -> None:
         """Fold a measured batch latency back in: the ratio measured/predicted

@@ -42,6 +42,7 @@ __all__ = [
     "GaussMarkovTrace",
     "replay_trace",
     "replay_rate_trace",
+    "serve_latency_table",
 ]
 
 
@@ -516,3 +517,74 @@ def enhanced_modnn_delay(
         avg_delay=t_e1 + t_e2 / n_tasks,
         throughput=n_tasks / (t_e1 + t_e2),
     )
+
+
+def serve_latency_table(
+    net: ConvNetGeom,
+    platform: Platform | None = None,
+    link: Link | None = None,
+    overlap_rows: int | None = None,
+    topology: CollabTopology | None = None,
+    ratios: Sequence[float] | None = None,
+    plan: HALPPlan | None = None,
+    host_platform: Platform | None = None,
+    max_batch: int = 8,
+    scenarios: Sequence[Mapping[str, float]] | None = None,
+) -> np.ndarray:
+    """DES-priced service-time model for the serving loop: ``table[s, b-1]``
+    is the makespan of a ``b``-task batch under scenario ``s``.
+
+    This is the request-stream replay's pricing step: for each batch width
+    ``b`` the full HALP DAG for ``b`` concurrent tasks is laid once
+    (:func:`~repro.core.events.build_halp_dag`) and every scenario's duration
+    vector sweeps through :meth:`Sim.run_batch` in one vectorized pass, so a
+    whole (scenario x batch-size) grid prices in milliseconds.  The serving
+    loop (``repro.runtime.serve.serve_trace``) then replays millions of
+    requests against the table without touching the DES again -- the
+    batched-DES division of labour that makes a simulated million-request day
+    cost seconds.
+
+    ``scenarios`` is a sequence of per-resource slowdown mappings (one table
+    row each; ``None`` means the single nominal scenario).  Keys are either
+    raw DES resource names (``"link:e0->a"``, ``"a^0"``) or bare ES names,
+    which expand exactly like the straggler harness: the host applies to its
+    own compute resource, a secondary to all ``b`` per-task clones
+    ``{es}^{t}``.  Calling conventions for the cluster match
+    :func:`simulate_halp` (paper-style ``(platform, link)`` or
+    ``topology=``)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    topology, plan = resolve_halp_setup(
+        net, platform, link, overlap_rows, topology, ratios, plan, host_platform
+    )
+    scen = list(scenarios) if scenarios is not None else [{}]
+    if not scen:
+        raise ValueError("scenarios must be non-empty when given")
+    table = np.empty((len(scen), max_batch))
+    for b in range(1, max_batch + 1):
+        sim = Sim()
+        build_halp_dag(sim, [plan] * b, topology)
+        base = np.array([job.duration for job in sim.jobs])
+        resources = [job.resource for job in sim.jobs]
+        durations = np.empty((len(scen), len(sim.jobs)))
+        for s, mapping in enumerate(scen):
+            slow: dict[str, float] = {}
+            for key, factor in mapping.items():
+                if factor <= 0:
+                    raise ValueError(f"slowdown for {key!r} must be positive, got {factor}")
+                if key in topology.platforms and key != topology.host:
+                    for t in range(b):
+                        slow[f"{key}^{t}"] = factor
+                elif key.startswith("link:") and "->" in key and "^" not in key:
+                    # bare directed pair: expand the secondary end to its
+                    # per-task clone resources, like the compute case above
+                    src, dst = key[len("link:") :].split("->", 1)
+                    for t in range(b):
+                        src_r = src if src == topology.host else f"{src}^{t}"
+                        dst_r = dst if dst == topology.host else f"{dst}^{t}"
+                        slow[f"link:{src_r}->{dst_r}"] = factor
+                else:
+                    slow[key] = factor
+            durations[s] = base * np.array([slow.get(r, 1.0) for r in resources])
+        table[:, b - 1] = sim.run_batch(durations).makespan
+    return table

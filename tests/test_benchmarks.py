@@ -161,6 +161,58 @@ def test_planner_speed_acceptance():
         assert sc["speedup"] >= 5.0, (name, sc["speedup"])
 
 
+def test_serve_sweep_acceptance():
+    """The serving pipeline under a flash crowd: admission shedding must keep
+    every class's deadline-met fraction -- premium above all -- at or above
+    the accept-everything baseline, shed a real fraction during the burst,
+    and the DES latency table driving admission must be positive and
+    non-decreasing in batch width."""
+    from benchmarks import serve_sweep
+
+    out = serve_sweep.run_sweep(smoke=True)
+    lat = out["lat_table_des"]
+    assert all(v > 0 for v in lat)
+    assert all(b >= a for a, b in zip(lat, lat[1:])), lat
+    # controller's plan-aware curve prices the same cluster: same ballpark
+    ratio = out["lat_table_controller"][0] / lat[0]
+    assert 0.5 < ratio < 2.0, ratio
+    fc = out["processes"]["flash_crowd"]
+    assert out["flash_premium_met_shed"] >= out["flash_premium_met_noshed"]
+    for cls in ("premium", "standard", "bulk"):
+        assert (
+            fc["shed"]["classes"][cls]["deadline_met_frac"]
+            >= fc["noshed"]["classes"][cls]["deadline_met_frac"]
+        ), cls
+    assert fc["shed"]["overall"]["shed_rate"] > 0.05
+    assert fc["noshed"]["overall"]["shed_rate"] == 0.0
+    # off-burst load is comfortable: steady Poisson meets ~everything
+    po = out["processes"]["poisson"]
+    assert po["shed"]["overall"]["deadline_met_frac"] > 0.99
+
+
+def test_serve_bench_artifact_floors():
+    """The committed full-run artifact must cover >= 10^6 simulated requests
+    across the three arrival processes and carry the tail/attainment/shed
+    fields per process x policy (the PR's acceptance floor)."""
+    import json
+
+    path = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+    if not path.exists():
+        pytest.skip("BENCH_serve.json not committed yet")
+    out = json.loads(path.read_text())
+    assert out["n_total"] >= 1_000_000, out["n_total"]
+    assert set(out["processes"]) == {"poisson", "diurnal", "flash_crowd"}
+    for rec in out["processes"].values():
+        for policy in ("shed", "noshed"):
+            o = rec[policy]["overall"]
+            for k in ("p99_latency_s", "p999_latency_s", "deadline_met_frac",
+                      "shed_rate", "completed"):
+                assert k in o, (policy, k)
+            assert o["p999_latency_s"] >= o["p99_latency_s"] >= 0.0
+            assert set(rec[policy]["classes"]) == {"premium", "standard", "bulk"}
+    assert out["flash_premium_met_shed"] >= out["flash_premium_met_noshed"]
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""
