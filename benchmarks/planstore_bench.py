@@ -1,0 +1,180 @@
+"""Cold vs warm restart through the persistent PlanStore.
+
+The claim under test (ROADMAP open item 2, the PR's tentpole): a controller
+restarted against a populated :class:`~repro.core.planstore.PlanStore` serves
+every operating point it has seen before with **zero optimizer calls**, its
+first plan arrives store-speed instead of optimiser-speed, and every
+store-served plan is **bit-identical** to the one a cold controller optimises
+fresh (same ``HALPPlan`` equality, float-equal makespans/ratios) -- pickled
+results round-trip exactly, and band-representative keying makes the entries
+reproducible regardless of which process computed them.
+
+Three phases over one drifting trace (links wander, the last secondary
+straggles -- the ``benchmarks/straggler_sweep.py`` drift modes on the small
+demo cluster of ``tools/precompute_plans.py``):
+
+* **cold**  -- fresh store file: every new operating point pays the
+  optimiser; we record optimizer calls and time-to-first-plan.
+* **warm**  -- a *new* controller + *new* store connection on the same file
+  (the process-restart model): same trace, zero optimizer calls required,
+  per-epoch plans/makespans compared bit-exactly against the cold run.
+* **reconfigured** -- same store, one optimiser knob changed
+  (``max_rounds``): the config lives in the content key, so the controller
+  must re-optimise from scratch (never serves a stale plan) -- the
+  invalidation-by-keying guarantee.
+
+Emits ``BENCH_planstore.json`` (``--out`` to move it, ``--smoke`` for the CI
+run).  Acceptance: ``tests/test_benchmarks.py::test_planstore_bench_acceptance``
+pins warm calls == 0, bit-identity, the reconfigure re-optimise, and a floor
+on the warm first-plan speedup.  CSV rows (``name,us_per_call,derived``)
+match the other benchmarks' format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import dataclasses  # noqa: E402
+
+from repro.core import GaussMarkovTrace, PlanStore, ReplanController  # noqa: E402
+from tools.precompute_plans import (  # noqa: E402
+    NOMINAL_BPS,
+    demo_config,
+    demo_net,
+    demo_topology,
+)
+
+
+def _drift_trace(n_epochs: int) -> tuple[list, list, list]:
+    """(rate of e0<->a, rate of e0<->b, eff-FLOP/s of straggler b) per epoch."""
+    link_a = GaussMarkovTrace(
+        lo=0.3 * NOMINAL_BPS, hi=1.5 * NOMINAL_BPS, corr=0.85, sigma_frac=0.15, seed=3
+    ).rates(n_epochs)
+    link_b = GaussMarkovTrace(
+        lo=0.2 * NOMINAL_BPS, hi=1.2 * NOMINAL_BPS, corr=0.85, sigma_frac=0.15, seed=5
+    ).rates(n_epochs)
+    nominal_flops = demo_topology().platform_of("b").eff_flops
+    straggle = GaussMarkovTrace(
+        lo=0.3 * nominal_flops, hi=nominal_flops, mean=0.5 * nominal_flops,
+        corr=0.9, sigma_frac=0.1, start=nominal_flops, seed=7,
+    ).rates(n_epochs)
+    return link_a, link_b, straggle
+
+
+def _run_controller(store_path: str, n_epochs: int, config=None) -> dict:
+    """One controller lifetime over the drift trace against ``store_path``.
+
+    Opens its own store connection (the restart/process model), records the
+    wall time of the very first plan request, and keeps the per-epoch
+    (bucket key, plan, makespan) trail for bit-identity comparison."""
+    link_a, link_b, straggle = _drift_trace(n_epochs)
+    with PlanStore(store_path) as store:
+        ctrl = ReplanController(
+            demo_net(), demo_topology(),
+            config if config is not None else demo_config(),
+            store=store,
+        )
+        t0 = time.perf_counter()
+        ctrl.current()
+        first_plan_s = time.perf_counter() - t0
+        trail = []
+        t0 = time.perf_counter()
+        for e in range(n_epochs):
+            for src, dst, rate in (
+                ("e0", "a", link_a[e]), ("a", "e0", link_a[e]),
+                ("e0", "b", link_b[e]), ("b", "e0", link_b[e]),
+            ):
+                # nbytes chosen so 8*nbytes/elapsed == rate at elapsed=1
+                ctrl.observe_transfer(src, dst, rate / 8.0, 1.0)
+            ctrl.observe_compute("b", straggle[e], 1.0)
+            ctrl.step()
+            r = ctrl.current()
+            trail.append((ctrl._active, r.plan, r.makespan))
+        stats = ctrl.stats()
+        return dict(
+            first_plan_s=first_plan_s,
+            epochs_s=time.perf_counter() - t0,
+            optimizer_calls=ctrl.optimizer_calls,
+            replans=ctrl.replans,
+            store_hits=stats.get("store_hits", 0),
+            store_entries=stats.get("store_entries", 0),
+            trail=trail,
+        )
+
+
+def run_all(smoke: bool = False, out_path: str | None = "BENCH_planstore.json") -> dict:
+    n_epochs = 40 if smoke else 200
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = os.path.join(tmp, "plans.sqlite")
+
+        cold = _run_controller(store_path, n_epochs)
+        warm = _run_controller(store_path, n_epochs)
+
+        plans_identical = all(
+            kc == kw and pc == pw
+            for (kc, pc, _), (kw, pw, _) in zip(cold["trail"], warm["trail"])
+        )
+        makespans_identical = all(
+            mc == mw for (_, _, mc), (_, _, mw) in zip(cold["trail"], warm["trail"])
+        )
+
+        # a changed optimiser knob keys differently: same store, but every
+        # operating point is new -- the controller must re-optimise
+        recfg = dataclasses.replace(demo_config(), max_rounds=demo_config().max_rounds + 1)
+        reconfigured = _run_controller(store_path, n_epochs, config=recfg)
+
+        out = dict(
+            n_epochs=n_epochs,
+            distinct_operating_points=len({k for k, _, _ in cold["trail"]}),
+            cold={k: v for k, v in cold.items() if k != "trail"},
+            warm={k: v for k, v in warm.items() if k != "trail"},
+            reconfigured={
+                k: v for k, v in reconfigured.items() if k != "trail"
+            },
+            warm_optimizer_calls=warm["optimizer_calls"],
+            plans_bit_identical=plans_identical,
+            makespans_bit_identical=makespans_identical,
+            reconfigured_reoptimized=reconfigured["optimizer_calls"] > 0,
+            warm_first_plan_speedup=cold["first_plan_s"] / max(1e-9, warm["first_plan_s"]),
+        )
+
+    print(f"epochs {n_epochs}, distinct operating points "
+          f"{out['distinct_operating_points']}")
+    print(f"{'phase':14s} {'opt calls':>9s} {'first plan (ms)':>16s} "
+          f"{'epochs (ms)':>12s} {'store hits':>10s}")
+    for phase in ("cold", "warm", "reconfigured"):
+        m = out[phase]
+        print(
+            f"{phase:14s} {m['optimizer_calls']:9d} {m['first_plan_s']*1e3:16.2f} "
+            f"{m['epochs_s']*1e3:12.1f} {m['store_hits']:10d}"
+        )
+        print(f"planstore_{phase}_first_plan,{m['first_plan_s']*1e6:.1f},"
+              f"{m['optimizer_calls']}")
+    print(
+        f"\nwarm restart: {out['warm_optimizer_calls']} optimizer calls "
+        f"(bit-identical plans: {out['plans_bit_identical']}, makespans: "
+        f"{out['makespans_bit_identical']}), first plan "
+        f"{out['warm_first_plan_speedup']:.1f}x faster than cold"
+    )
+    print(f"planstore_warm_speedup,,{out['warm_first_plan_speedup']:.2f}")
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True, default=str)
+        print(f"\nwrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="BENCH_planstore.json")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, out_path=args.out)

@@ -3,8 +3,9 @@ HALP / MoDNN scheduling over arbitrary collaboration topologies (topology,
 schedule), one shared event topology feeding both latency engines (events),
 exact event simulation (simulator), plan-knob search (optimizer), the
 service-reliability model (reliability), online joint compute+link adaptive
-re-planning with a plan cache (replan), and per-task heterogeneous placement
-over a shared ES pool (placement)."""
+re-planning with a plan cache (replan), a persistent content-keyed plan store
+for warm starts across restarts (planstore), and per-task heterogeneous
+placement over a shared ES pool (placement)."""
 from .nets import ConvNetGeom, vgg16_geom
 from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
 from .partition import (
@@ -32,6 +33,7 @@ from .reliability import (
     required_slack,
     service_reliability,
 )
+from .planstore import PLAN_SCHEMA_VERSION, PlanStore, canonical_key, key_hash
 from .replan import (
     ComputeRateEstimator,
     LinkRateEstimator,

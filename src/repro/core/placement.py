@@ -512,9 +512,10 @@ class PlacementController(ReplanController):
         config: ReplanConfig = ReplanConfig(),
         cache=None,
         placement_options: dict | None = None,
+        store=None,
     ):
         self.placement_options = dict(placement_options or {})
-        super().__init__(net, pool, config=config, cache=cache)
+        super().__init__(net, pool, config=config, cache=cache, store=store)
 
     def _optimize(self, topology: CollabTopology) -> PlacementResult:
         return place_tasks(

@@ -273,38 +273,64 @@ class PlanCache:
 
     ``get`` / ``put`` are O(1); ``hits``/``misses``/``evictions`` make the
     amortisation claim measurable (``benchmarks/replan_sweep.py`` asserts a
-    >= 90% steady-state hit rate)."""
+    >= 90% steady-state hit rate).
 
-    def __init__(self, capacity: int = 128):
+    With a persistent ``store`` (:class:`~repro.core.planstore.PlanStore`)
+    attached, the cache becomes the in-memory front of a two-tier read-through
+    / write-through hierarchy: a memory miss falls through to the store (a
+    store hit is promoted into the LRU *without* a write-back and counted in
+    both ``hits`` and ``store_hits``), ``put`` writes both tiers, and LRU
+    eviction only drops the memory copy -- the store keeps every plan ever
+    optimised, so restarts and sibling processes warm-start from it.
+    ``peek`` stays memory-only by design: the serving path peeks per
+    admission decision, and hammering sqlite from that loop would buy nothing
+    (the active entry is always resident after its first ``get``)."""
+
+    def __init__(self, capacity: int = 128, store=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
+        self.store = store
         self._entries: OrderedDict[tuple, OptimizeResult] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.store_hits = 0  # memory misses served by the persistent tier
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def get(self, key: tuple) -> OptimizeResult | None:
         entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return entry
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
+        if self.store is not None:
+            entry = self.store.get(key)
+            if entry is not None:
+                self._insert(key, entry)
+                self.hits += 1
+                self.store_hits += 1
+                return entry
+        self.misses += 1
+        return None
 
     def peek(self, key: tuple) -> OptimizeResult | None:
-        """Read without touching hit/miss counters or the LRU order.  The
-        serving path (latency predictions, admission control) peeks, so the
-        telemetry keeps counting *plan requests per control epoch* -- the
-        quantity the amortisation claim is stated in -- rather than being
-        swamped by per-admission lookups."""
+        """Read the *memory tier only*, without touching hit/miss counters or
+        the LRU order.  The serving path (latency predictions, admission
+        control) peeks, so the telemetry keeps counting *plan requests per
+        control epoch* -- the quantity the amortisation claim is stated in --
+        rather than being swamped by per-admission lookups."""
         return self._entries.get(key)
 
-    def put(self, key: tuple, result: OptimizeResult) -> None:
+    def put(self, key: tuple, result: OptimizeResult, provenance: dict | None = None) -> None:
+        self._insert(key, result)
+        if self.store is not None:
+            self.store.put(key, result, provenance=provenance)
+
+    def _insert(self, key: tuple, result: OptimizeResult) -> None:
+        """Memory-tier insert with LRU eviction (never touches the store)."""
         self._entries[key] = result
         self._entries.move_to_end(key)
         if len(self._entries) > self.capacity:
@@ -446,11 +472,18 @@ class ReplanController:
         topology: CollabTopology,
         config: ReplanConfig = ReplanConfig(),
         cache: PlanCache | None = None,
+        store=None,
     ):
         self.net = net
         self.nominal = topology
         self.config = config
-        self.cache = cache if cache is not None else PlanCache()
+        # store= attaches a persistent tier (core.planstore.PlanStore): a
+        # restarted controller then serves previously-optimised operating
+        # points with zero optimizer calls (warm start), and controllers in
+        # other processes sharing the same store file inherit them too.
+        self.cache = cache if cache is not None else PlanCache(store=store)
+        if store is not None and self.cache.store is None:
+            self.cache.store = store
         self.estimator = LinkRateEstimator.from_topology(topology, alpha=config.alpha)
         self.compute_estimator = ComputeRateEstimator.from_topology(
             topology, alpha=config.alpha
@@ -572,6 +605,12 @@ class ReplanController:
         self._active = candidate
         self._pending_count = 0
         self.replans += 1
+        # a bucket switch retires every latency-memo entry priced at another
+        # operating point; without this the memo grows one latency table per
+        # bucket key ever visited over a long-running controller
+        self._latency_memo = {
+            k: v for k, v in self._latency_memo.items() if k[1] == candidate
+        }
         return True
 
     def _optimize(self, topology: CollabTopology) -> OptimizeResult:
@@ -589,10 +628,43 @@ class ReplanController:
         key = (self._fingerprint, self._active)
         result = self.cache.get(key)
         if result is None:
-            result = self._optimize(self.estimated_topology())
+            topology = self.estimated_topology()
+            result = self._optimize(topology)
             self.optimizer_calls += 1
-            self.cache.put(key, result)
+            self.cache.put(key, result, provenance=self._provenance(topology, result))
         return result
+
+    def _provenance(self, topology: CollabTopology, result: OptimizeResult) -> dict:
+        """What a freshly-optimised entry was computed against -- the band
+        representatives, not the raw measurements (the measurements that led
+        here are not part of the key, so recording them would be misleading).
+        Persisted verbatim by the store tier; harmless when there is none."""
+        return dict(
+            kind=self._cache_kind,
+            engine=self.config.engine,
+            makespan=float(result.makespan),
+            host=topology.host,
+            link_rates_bps={
+                f"{src}->{dst}": topology.link_between(src, dst).rate_bps
+                for src, dst in topology.collab_pairs()
+            },
+            platform_eff_flops={
+                es: topology.platform_of(es).eff_flops for es in topology.es_names
+            },
+        )
+
+    def prime(self, bucket_key: tuple) -> OptimizeResult:
+        """Fill the cache (and store, if attached) for an arbitrary operating
+        point without adopting it: the offline entry point
+        ``tools/precompute_plans.py`` uses to walk the bucket lattice with the
+        controller's own keying/optimisation logic.  The active key, pending
+        hysteresis count, and latency memo are left untouched."""
+        saved = self._active
+        self._active = bucket_key
+        try:
+            return self.current()
+        finally:
+            self._active = saved
 
     def _active_result(self) -> OptimizeResult:
         """The active plan without disturbing the epoch telemetry (peek);
@@ -668,7 +740,7 @@ PlacementController` overrides with the shared-secondary multi-task DES)."""
         self._calibration = (1.0 - a) * self._calibration + a * ratio
 
     def stats(self) -> dict:
-        return dict(
+        out = dict(
             epochs=self.epochs,
             replans=self.replans,
             optimizer_calls=self.optimizer_calls,
@@ -678,3 +750,9 @@ PlacementController` overrides with the shared-secondary multi-task DES)."""
             cache_hit_rate=self.cache.hit_rate,
             calibration=self._calibration,
         )
+        if self.cache.store is not None:
+            # warm-start telemetry: how many plan requests the persistent
+            # tier absorbed that would otherwise have been optimizer calls
+            out["store_hits"] = self.cache.store_hits
+            out["store_entries"] = len(self.cache.store)
+        return out

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import heapq
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -162,6 +163,11 @@ class BatchingEngine:
         self.queue: list[Request] = []  # deadline-ordered heap (EDF)
         self.completed: list[Request] = []
         self._rid = 0
+        # arrival-ordered view of the queue for O(1) oldest-pending lookup in
+        # ready(): submit() appends (the clock is monotone, so FIFO = arrival
+        # order) and _take_batch() records taken rids for lazy head pruning
+        self._fifo: deque[Request] = deque()
+        self._taken: set[int] = set()
 
     def submit(self, payload, deadline_s: float) -> int:
         self._rid += 1
@@ -172,6 +178,7 @@ class BatchingEngine:
             arrival=self.clock(),
         )
         heapq.heappush(self.queue, req)
+        self._fifo.append(req)
         return self._rid
 
     def observe_es_time(self, es: str, flops: float, elapsed_s: float) -> None:
@@ -189,8 +196,20 @@ class BatchingEngine:
     def _take_batch(self) -> list[Request]:
         batch = []
         while self.queue and len(batch) < self.cfg.max_batch:
-            batch.append(heapq.heappop(self.queue))
+            req = heapq.heappop(self.queue)
+            self._taken.add(req.rid)
+            batch.append(req)
         return batch
+
+    def _oldest_pending(self) -> Request:
+        """The earliest-arrived queued request, O(1) amortised: prune taken
+        requests off the FIFO head lazily (each request is appended and
+        discarded exactly once over its lifetime, vs. the old O(n) min() scan
+        of the whole heap on every poll)."""
+        fifo = self._fifo
+        while fifo[0].rid in self._taken:
+            self._taken.discard(fifo.popleft().rid)
+        return fifo[0]
 
     def ready(self) -> bool:
         """Whether a batch should launch *now*: the queue holds a full
@@ -203,8 +222,7 @@ class BatchingEngine:
             return False
         if len(self.queue) >= self.cfg.max_batch:
             return True
-        oldest = min(r.arrival for r in self.queue)
-        return self.clock() - oldest >= self.cfg.max_delay_s
+        return self.clock() - self._oldest_pending().arrival >= self.cfg.max_delay_s
 
     def poll(self) -> list[Request]:
         """Run one batch iff :meth:`ready`; otherwise an empty no-op.  The
@@ -444,9 +462,12 @@ def serve_trace(trace, lat_table: np.ndarray, cfg: ServeLoopConfig = ServeLoopCo
 
     The loop (documented here once, both code paths implement it exactly):
 
-    1. **Formation** -- let ``first`` be the earliest pending arrival.  If a
-       full ``max_batch`` has arrived by ``t0 = max(server_free, first)``,
-       the batch forms at ``t0``; otherwise it forms at
+    1. **Formation** -- let ``first`` be the earliest pending arrival and
+       ``t0 = max(server_free, first)``.  If a full ``max_batch`` is already
+       pending at ``t0``, the batch forms at ``t0``; otherwise it forms at
+       the *earlier* of the ``max_batch``-th pending arrival (the queue
+       fills during the wait -- the launch-when-full rule of
+       :meth:`BatchingEngine.ready`) and
        ``max(server_free, first + max_delay_s)`` (the head's delay budget).
     2. **EDF** -- up to ``max_batch`` arrived requests are taken earliest
        absolute deadline first (ties by arrival order), merged across the
@@ -610,12 +631,28 @@ def serve_trace(trace, lat_table: np.ndarray, cfg: ServeLoopConfig = ServeLoopCo
         # ---- scalar event step: one batch formation -----------------------
         t0 = max(free, first_t)
         pending0 = 0
+        pos = [0] * n_cls
         for c in range(n_cls):
-            pending0 += int(np.searchsorted(arr_c[c], t0, side="right")) - head[c]
+            pos[c] = int(np.searchsorted(arr_c[c], t0, side="right"))
+            pending0 += pos[c] - head[c]
         if pending0 >= max_batch:
             form_t = t0
         else:
-            form_t = max(free, first_t + max_delay)
+            # the queue may fill to max_batch *during* the head's delay wait:
+            # the batch then forms at the max_batch-th pending arrival
+            # (BatchingEngine.ready's launch-when-full rule), not at the
+            # budget.  The fill time is the `need`-th arrival after t0 --
+            # gather at most `need` upcoming arrivals per class and merge.
+            need = max_batch - pending0
+            upcoming = np.concatenate(
+                [arr_c[c][pos[c] : pos[c] + need] for c in range(n_cls)]
+            )
+            if len(upcoming) >= need:
+                upcoming.sort()
+                t_full = float(upcoming[need - 1])
+            else:
+                t_full = np.inf
+            form_t = min(t_full, max(free, first_t + max_delay))
         ends = [int(np.searchsorted(arr_c[c], form_t, side="right")) for c in range(n_cls)]
 
         # EDF merge across the class heads (ties by global arrival index)

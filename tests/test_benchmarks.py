@@ -213,6 +213,46 @@ def test_serve_bench_artifact_floors():
     assert out["flash_premium_met_shed"] >= out["flash_premium_met_noshed"]
 
 
+def test_planstore_bench_acceptance():
+    """Warm restart against a populated PlanStore must serve the whole drift
+    trace with ZERO optimizer calls and bit-identical plans/makespans to the
+    cold run, and a changed optimizer config must force re-optimisation (the
+    tentpole acceptance criteria of the persistent plan store)."""
+    from benchmarks import planstore_bench
+
+    out = planstore_bench.run_all(smoke=True, out_path=None)
+    assert out["warm_optimizer_calls"] == 0
+    assert out["plans_bit_identical"] is True
+    assert out["makespans_bit_identical"] is True
+    assert out["warm"]["store_hits"] == out["cold"]["optimizer_calls"]
+    assert out["reconfigured_reoptimized"] is True
+    assert out["reconfigured"]["store_hits"] == 0  # never serves a stale plan
+    # the restart speedup is the point: store read vs full optimisation
+    assert out["warm_first_plan_speedup"] >= 5.0, out["warm_first_plan_speedup"]
+    # drift really exercised the lattice (several operating points visited)
+    assert out["distinct_operating_points"] >= 5
+
+
+def test_planstore_bench_artifact_floors():
+    """The committed full-run artifact must carry the warm-restart claims at
+    full trace length (the PR's acceptance floor)."""
+    import json
+
+    path = Path(__file__).resolve().parents[1] / "BENCH_planstore.json"
+    if not path.exists():
+        pytest.skip("BENCH_planstore.json not committed yet")
+    out = json.loads(path.read_text())
+    assert out["n_epochs"] >= 100
+    assert out["warm_optimizer_calls"] == 0
+    assert out["plans_bit_identical"] is True
+    assert out["makespans_bit_identical"] is True
+    assert out["reconfigured_reoptimized"] is True
+    assert out["warm_first_plan_speedup"] >= 10.0
+    assert out["cold"]["optimizer_calls"] >= 20  # real lattice coverage
+    assert out["warm"]["store_hits"] == out["cold"]["optimizer_calls"]
+    assert out["warm"]["store_entries"] == out["cold"]["store_entries"]
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""

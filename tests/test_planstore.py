@@ -1,0 +1,286 @@
+"""PlanStore conformance: canonical keying, persistence, schema/config
+invalidation, the two-tier PlanCache, warm restarts, and cross-process
+sharing (one store file, many controllers -- the fleet model).
+
+Optimisations here all use the small closed-form demo cluster of
+``tools/precompute_plans.py`` (the same fixtures CI's precomputed artifact is
+built from), so every test that actually runs the optimiser costs well under
+a second."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))  # tools/ is a plain directory, not a package
+
+from repro.core import (
+    PLAN_SCHEMA_VERSION,
+    PlanCache,
+    PlanStore,
+    ReplanController,
+    canonical_key,
+    key_hash,
+)
+from tools.precompute_plans import (
+    demo_config,
+    demo_net,
+    demo_topology,
+    lattice_keys,
+    precompute,
+)
+
+import dataclasses
+
+
+def _controller(store=None, config=None):
+    return ReplanController(
+        demo_net(), demo_topology(),
+        config if config is not None else demo_config(),
+        store=store,
+    )
+
+
+# ---------------------------------------------------------------------------
+# canonical_key: the serialisation the whole content-keying scheme rests on
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_key_is_type_distinct():
+    """Values that compare unequal in Python must never alias in the store:
+    str vs int vs float vs bool vs None all serialise distinctly."""
+    distinct = [
+        ("1",), (1,), (1.0,), (True,), (None,),
+        (("a",),), ("a",), ((),), (0.5,), (0.25 + 0.25,),
+    ]
+    texts = [canonical_key(k) for k in distinct]
+    # (0.5,) and (0.25+0.25,) ARE the same float -- same text; all else differs
+    assert texts[8] == texts[9]
+    assert len(set(texts[:9])) == 9
+    # equal keys always produce equal text and equal hashes
+    key = (("plan", ("e0", ("a", "b")), 0.5), ((("e0", "a"), -3),))
+    assert canonical_key(key) == canonical_key(key)
+    assert key_hash(key) == key_hash(key)
+
+
+def test_canonical_key_rejects_unsupported():
+    with pytest.raises(TypeError):
+        canonical_key(({"a": 1},))
+    with pytest.raises(ValueError):
+        canonical_key((float("inf"),))
+    with pytest.raises(ValueError):
+        canonical_key((float("nan"),))
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: round trip, provenance, invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_store_round_trip_bit_identical(tmp_path):
+    """A stored OptimizeResult comes back *equal* -- same plan dataclass,
+    same float makespan bits -- and provenance rides along."""
+    ctrl = _controller()
+    result = ctrl.current()
+    key = (ctrl._fingerprint, ctrl._active)
+    with PlanStore(tmp_path / "s.sqlite") as store:
+        assert store.get(key) is None and store.misses == 1
+        store.put(key, result, provenance={"engine": "batched", "note": "t"})
+        loaded = store.get(key)
+        assert loaded == result  # full dataclass equality, plan included
+        assert loaded.makespan == result.makespan
+        assert store.hits == 1 and store.writes == 1 and len(store) == 1
+        prov = store.provenance(key)
+        assert prov["engine"] == "batched" and prov["note"] == "t"
+        assert prov["makespan"] == result.makespan
+        assert prov["created_s"] > 0
+        assert store.keys() == [canonical_key(key)]
+        assert store.keys(kind="plan") == [canonical_key(key)]
+        assert store.keys(kind="placement") == []
+
+
+def test_store_schema_version_invalidation(tmp_path):
+    """Rows written under another PLAN_SCHEMA_VERSION are never served, count
+    as stale, and prune_stale garbage-collects them."""
+    path = tmp_path / "s.sqlite"
+    key = (("plan", "k"), (1,))
+    with PlanStore(path) as store:
+        store.put(key, ("payload",))
+    with PlanStore(path, schema_version=PLAN_SCHEMA_VERSION + 1) as bumped:
+        assert bumped.get(key) is None
+        assert bumped.stale == 1 and bumped.misses == 1
+        assert len(bumped) == 0  # the old row is invisible, not just unread
+        assert bumped.prune_stale() == 1
+    with PlanStore(path) as reopened:
+        assert reopened.get(key) is None  # pruned for good
+
+
+def test_store_hash_collision_never_serves_wrong_plan(tmp_path):
+    """Even if two keys collided in sha256, the stored canonical text must
+    veto the read (simulated by corrupting key_text in place)."""
+    key = (("plan", "k"), (1,))
+    with PlanStore(tmp_path / "s.sqlite") as store:
+        store.put(key, ("payload",))
+        store._conn.execute(
+            "UPDATE plans SET key_text = ?", (canonical_key((("plan", "other"), (2,))),)
+        )
+        store._conn.commit()
+        assert store.get(key) is None and store.misses == 1
+
+
+def test_store_invalidate_by_kind(tmp_path):
+    with PlanStore(tmp_path / "s.sqlite") as store:
+        store.put((("plan", "a"), (1,)), 1)
+        store.put((("placement", "b"), (2,)), 2)
+        assert len(store) == 2
+        assert store.invalidate(kind="placement") == 1
+        assert store.keys(kind="placement") == []
+        assert len(store) == 1
+        assert store.invalidate() == 1
+        assert len(store) == 0
+
+
+# ---------------------------------------------------------------------------
+# Two-tier PlanCache
+# ---------------------------------------------------------------------------
+
+
+def test_two_tier_cache_store_outlives_lru_eviction(tmp_path):
+    """LRU eviction drops only the memory copy: the evicted key comes back
+    as a store hit, and peek stays memory-only throughout."""
+    with PlanStore(tmp_path / "s.sqlite") as store:
+        cache = PlanCache(capacity=1, store=store)
+        k1, k2 = (("plan", "x"), (1,)), (("plan", "x"), (2,))
+        cache.put(k1, "r1")
+        cache.put(k2, "r2")  # evicts k1 from memory; store keeps both
+        assert cache.evictions == 1 and len(cache) == 1 and len(store) == 2
+        assert cache.peek(k1) is None  # memory-only by design
+        assert cache.get(k1) == "r1"  # served by the store...
+        assert cache.store_hits == 1 and cache.hits == 1
+        assert cache.peek(k1) == "r1"  # ...and promoted into memory
+        # promotion did not write back: still exactly one write per put
+        assert store.writes == 2
+        # a genuine miss misses both tiers
+        assert cache.get((("plan", "x"), (3,))) is None
+        assert cache.misses == 1
+
+
+def test_storeless_cache_counters_unchanged():
+    """Without a store the two-tier cache is exactly the old LRU: same
+    counters, same eviction behaviour (the pinned test_replan counts rely on
+    this)."""
+    cache = PlanCache(capacity=2)
+    assert cache.store is None
+    cache.put("a", 1)
+    assert cache.get("a") == 1 and cache.get("b") is None
+    assert (cache.hits, cache.misses, cache.store_hits) == (1, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Controllers over a persistent store: warm starts, invalidation, sharing
+# ---------------------------------------------------------------------------
+
+
+def test_warm_restart_serves_first_plan_with_zero_optimizer_calls(tmp_path):
+    path = tmp_path / "plans.sqlite"
+    with PlanStore(path) as store:
+        cold = _controller(store=store)
+        r_cold = cold.current()
+        assert cold.optimizer_calls == 1
+        assert cold.stats()["store_entries"] == 1
+    # the restart: new process model -- new connection, new controller
+    with PlanStore(path) as store:
+        warm = _controller(store=store)
+        r_warm = warm.current()
+        assert warm.optimizer_calls == 0  # the acceptance criterion
+        assert warm.stats()["store_hits"] == 1
+        assert r_warm == r_cold  # bit-identical result, plan and makespan
+        assert r_warm.plan == r_cold.plan
+        assert r_warm.makespan == r_cold.makespan
+
+
+def test_optimizer_config_change_never_serves_stale_plan(tmp_path):
+    path = tmp_path / "plans.sqlite"
+    with PlanStore(path) as store:
+        _controller(store=store).current()
+    with PlanStore(path) as store:
+        recfg = dataclasses.replace(demo_config(), max_rounds=demo_config().max_rounds + 1)
+        ctrl = _controller(store=store, config=recfg)
+        ctrl.current()
+        assert ctrl.optimizer_calls == 1  # keyed differently => re-optimised
+        assert ctrl.stats()["store_hits"] == 0
+        assert len(store) == 2  # both configs' entries coexist
+
+
+def test_prime_fills_store_without_adopting(tmp_path):
+    with PlanStore(tmp_path / "plans.sqlite") as store:
+        ctrl = _controller(store=store)
+        active_before = ctrl._active
+        keys = lattice_keys(ctrl, [-1, 0], [-1, 0])
+        for k in keys:
+            ctrl.prime(k)
+        assert ctrl._active == active_before
+        assert ctrl.optimizer_calls == len(keys)
+        assert len(store) == len(keys)
+        # priming again is free: all store/memory hits
+        for k in keys:
+            ctrl.prime(k)
+        assert ctrl.optimizer_calls == len(keys)
+
+
+def test_cross_process_sharing_one_store_file(tmp_path):
+    """A store populated by a *different process* (the precompute tool run
+    via subprocess) warm-starts a controller here: the whole lattice serves
+    with zero optimizer calls."""
+    path = tmp_path / "plans.sqlite"
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "precompute_plans.py"),
+         "--store", str(path), "--smoke"],
+        capture_output=True, text=True, cwd=str(REPO), timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert path.exists()
+    with PlanStore(path) as store:
+        assert len(store) == 9  # the smoke lattice is 3 x 3
+        ctrl = _controller(store=store)
+        for key in lattice_keys(ctrl, [-1, 0, 1], [-2, -1, 0]):
+            ctrl.prime(key)
+        assert ctrl.optimizer_calls == 0
+        assert ctrl.cache.store_hits == 9
+
+
+def test_two_controllers_share_one_store_live(tmp_path):
+    """Two live controllers over separate connections to one file: what one
+    optimises, the other reads -- no second optimisation."""
+    path = tmp_path / "plans.sqlite"
+    with PlanStore(path) as s1, PlanStore(path) as s2:
+        a, b = _controller(store=s1), _controller(store=s2)
+        a.current()
+        b.current()
+        assert a.optimizer_calls == 1 and b.optimizer_calls == 0
+        assert b.cache.store_hits == 1
+        assert b.plan == a.plan
+
+
+def test_ci_artifact_store_warm(tmp_path):
+    """Store-backed run against the CI-built artifact (set PLANSTORE_ARTIFACT
+    to the uploaded file): every smoke-lattice point must serve warm."""
+    artifact = os.environ.get("PLANSTORE_ARTIFACT")
+    if not artifact or not Path(artifact).exists():
+        pytest.skip("PLANSTORE_ARTIFACT not provided")
+    with PlanStore(artifact) as store:
+        ctrl = _controller(store=store)
+        for key in lattice_keys(ctrl, [-1, 0, 1], [-2, -1, 0]):
+            ctrl.prime(key)
+        assert ctrl.optimizer_calls == 0, "artifact store must cover the smoke lattice"
+
+
+def test_precompute_is_idempotent(tmp_path):
+    path = str(tmp_path / "plans.sqlite")
+    first = precompute(path, [-1, 0], [0])
+    again = precompute(path, [-1, 0], [0])
+    assert first["optimizer_calls"] == 2 and first["store_entries"] == 2
+    assert again["optimizer_calls"] == 0 and again["already_stored"] == 2
+    assert again["store_entries"] == 2

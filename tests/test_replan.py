@@ -589,3 +589,32 @@ def test_replanned_plan_is_lossless():
     ref = vgg.features(params, CFG, x)
     out = run_plan(plan, params["features"], vgg.apply_layer, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# -- latency-memo eviction on bucket switch -----------------------------------
+
+
+def test_latency_memo_evicted_on_bucket_switch():
+    """The serving-path memo holds only the active operating point's rows
+    after a bucket switch: without eviction it grows one latency table per
+    key ever visited over a long-running controller."""
+    ctl = ReplanController(NET, small_topology(), FAST)
+    ctl.latency_table(4)
+    assert len(ctl._latency_memo) == 4
+    first_key = ctl._active
+    observe_rate(ctl, 30e6)
+    assert ctl.step()  # adopted: the old key's rows must be gone
+    assert all(k[1] == ctl._active for k in ctl._latency_memo)
+    assert not any(k[1] == first_key for k in ctl._latency_memo)
+    ctl.latency_table(4)
+    assert len(ctl._latency_memo) == 4
+    # hit semantics intact: repricing the active point costs no new entries
+    ctl.latency_table(4)
+    assert len(ctl._latency_memo) == 4
+    # returning to the first bucket reprices it fresh (correctness over
+    # reuse: the memo is a per-operating-point working set, not a store)
+    observe_rate(ctl, NOMINAL)
+    assert ctl.step()
+    ctl.latency_table(2)
+    assert len(ctl._latency_memo) == 2
+    assert all(k[1] == ctl._active for k in ctl._latency_memo)

@@ -505,6 +505,115 @@ def test_property_singleton_admission_matches_choose_batch_size(
     assert bool(out.shed[0]) == (not expect_admit)
 
 
+def test_serve_trace_forms_batch_when_queue_fills_mid_wait():
+    """The queue reaching max_batch *during* the head's delay wait must form
+    the batch at the max_batch-th arrival (BatchingEngine's launch-when-full
+    rule), not at the head's full delay budget -- on both code paths."""
+    cls = (DeadlineClass("c", 10.0, target=0.9),)
+    cfg = dict(max_batch=3, max_delay_s=0.5, admission=False)
+    # fills at t=0.2 < 0.0+0.5: one width-3 batch formed at 0.2
+    tr = Trace(np.array([0.0, 0.1, 0.2]), np.zeros(3, dtype=np.int64), cls)
+    out = serve_trace(tr, LAT, ServeLoopConfig(**cfg))
+    assert out.n_batches == 1 and out.batch_size_counts[3] == 1
+    assert np.allclose(out.fin, 0.2 + LAT[2])
+    _assert_served_equal(
+        out, serve_trace(tr, LAT, ServeLoopConfig(**cfg, fast_path=False))
+    )
+    # the third arrival misses the budget: the head's delay still rules and
+    # the late request becomes its own batch
+    tr2 = Trace(np.array([0.0, 0.1, 0.9]), np.zeros(3, dtype=np.int64), cls)
+    out2 = serve_trace(tr2, LAT, ServeLoopConfig(**cfg))
+    assert out2.n_batches == 2
+    assert out2.batch_size_counts[2] == 1 and out2.batch_size_counts[1] == 1
+    assert np.allclose(out2.fin[:2], 0.5 + LAT[1])
+    assert np.allclose(out2.fin[2], 0.9 + 0.5 + LAT[0])
+    _assert_served_equal(
+        out2, serve_trace(tr2, LAT, ServeLoopConfig(**cfg, fast_path=False))
+    )
+
+
+def _engine_reference(tr, lat, mb, max_delay):
+    """Step-by-step BatchingEngine + VirtualClock reference for serve_trace
+    (admission off, deterministic channel): submit each arrival at its exact
+    arrival instant, launch by eng.ready() gated on a single busy server, and
+    charge lat[b-1] of virtual service time per width-b batch.  Returns
+    (fin per request, n_batches, batch-size histogram)."""
+    clk = VirtualClock()
+    eng = BatchingEngine(
+        jax.jit(lambda b: b),
+        ServeConfig(max_batch=mb, max_delay_s=max_delay, pad_to_max=False),
+        clock=clk,
+    )
+    arr = tr.arrival
+    rel = np.array([c.deadline_s for c in tr.classes])[tr.cls]
+    n = len(tr)
+    fin = np.full(n, np.nan)
+    counts = np.zeros(mb + 1, dtype=np.int64)
+    n_batches = 0
+    i = 0
+    free = 0.0
+    while i < n or eng.queue:
+        now = clk.now()
+        while i < n and arr[i] <= now:
+            eng.submit(jnp.zeros(()), deadline_s=float(rel[i]))
+            i += 1
+        if eng.queue and now >= free:
+            if eng.ready():
+                batch = eng.step()
+                b = len(batch)
+                t_fin = now + lat[b - 1]
+                for r in batch:
+                    fin[r.rid - 1] = t_fin  # rids: 1-based submission order
+                free = t_fin
+                counts[b] += 1
+                n_batches += 1
+                continue
+            exp = eng._oldest_pending().arrival + max_delay
+            if exp <= now:
+                # fp edge: ready()'s (now - a) >= delay can round an ulp
+                # below delay at the nominal expiry a + delay -- crawl ulps
+                # until the engine agrees (1-2 iterations), never past it
+                clk.advance_to(float(np.nextafter(now, np.inf)))
+                continue
+        cands = []
+        if i < n:
+            cands.append(float(arr[i]))
+        if eng.queue:
+            if free > now:
+                # blocked on the busy server: the next decision instant is
+                # free (the head's expiry may already be behind us)
+                cands.append(free)
+            else:
+                cands.append(eng._oldest_pending().arrival + max_delay)
+        clk.advance_to(min(cands))
+    return fin, n_batches, counts
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rate=st.floats(min_value=20.0, max_value=200.0),
+    seed=st.integers(min_value=0, max_value=10_000),
+    mb=st.integers(min_value=2, max_value=6),
+    delay=st.sampled_from([0.005, 0.02, 0.1]),
+    fast=st.sampled_from([True, False]),
+)
+def test_property_matches_batching_engine_reference(rate, seed, mb, delay, fast):
+    """Both serve_trace code paths replicate the live BatchingEngine's
+    semantics on random traces -- same batches formed at the same times (full
+    -- including filling mid-wait -- or head-delay-expired), same EDF
+    membership, same completions.  High rates with small max_batch make the
+    full-queue-mid-wait case the dominant regime."""
+    tr = make_trace(PoissonProcess(rate, seed=seed), CLASSES, 4.0, seed=seed + 1)
+    cfg = ServeLoopConfig(
+        max_batch=mb, max_delay_s=delay, admission=False, fast_path=fast
+    )
+    out = serve_trace(tr, LAT, cfg)
+    ref_fin, ref_batches, ref_counts = _engine_reference(tr, LAT, mb, delay)
+    assert out.n_batches == ref_batches
+    assert np.array_equal(out.batch_size_counts, ref_counts)
+    assert np.allclose(out.fin, ref_fin, rtol=0.0, atol=1e-9, equal_nan=True)
+
+
 def test_serve_trace_offload_noise_is_seeded():
     tr = make_trace(PoissonProcess(30.0, seed=1), CLASSES, 30.0, seed=2)
     a = serve_trace(tr, LAT, ServeLoopConfig(channel=CH, seed=5))
