@@ -1,0 +1,162 @@
+"""Per-stage partitioning-scheme search vs halo-only planning.
+
+The claim under test (ROADMAP direction 4, this PR's tentpole): enlarging the
+planner's per-stage search space from {halo_segment} to {halo_segment,
+non_penetrative, head_sequence} never hurts -- the joint search is seeded at
+the halo-only optimum's ratios and the halo-first baseline assignment, so the
+searched makespan is bounded by the halo-only one on every cell -- and pays
+off decisively where row/halo partitioning cannot apply at all: attention
+models, whose attn stages the halo-only planner must leave on the host
+(``host_solo``), collapse onto head-split stages priced in the same
+rate-independent DES sweep.
+
+Grid: {VGG-16, ViT-L/16} x {symmetric, skewed} 3-ES AGX-Xavier clusters.  Per
+cell we record both plans' makespans, the searched per-stage scheme
+assignment, and per-stage link bytes (``comm_bytes_per_stage``) -- the
+non-penetrative/head-split stages *buy* their compute spread with
+redistribution traffic, and the table makes that trade explicit.
+
+Emits ``BENCH_schemes.json`` (``--out`` to move it, ``--smoke`` for the
+CI-sized nets).  Acceptance: ``tests/test_benchmarks.py::
+test_scheme_sweep_acceptance`` pins searched <= halo-only on every cell and
+a >= 10% reduction on at least one; ``test_scheme_bench_artifact_floors``
+pins the committed full-run artifact.  CSV rows
+(``name,us_per_call,derived``) match the other benchmarks' format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (  # noqa: E402
+    AGX_XAVIER,
+    SCHEME_HALO,
+    SCHEMES,
+    CollabTopology,
+    Link,
+    comm_bytes_per_stage,
+    optimize_plan,
+    stage_spans,
+    vgg16_geom,
+    vit_l16_geom,
+)
+
+# Heterogeneity of the skewed cell: platform scales and alternating link rates
+# (the regime where ratio search matters most; mirrors tests/test_conformance).
+SKEW_SCALES = (1.0, 0.6, 0.35)
+
+
+def sym_topology() -> CollabTopology:
+    return CollabTopology.symmetric(AGX_XAVIER, Link(40e9), n_secondaries=3)
+
+
+def skew_topology() -> CollabTopology:
+    secs = ("e1", "e2", "e3")
+    platforms = {"e0": AGX_XAVIER}
+    links = {}
+    for j, (s, scale) in enumerate(zip(secs, SKEW_SCALES)):
+        platforms[s] = AGX_XAVIER.scaled(scale, f"es x{scale:g}")
+        rate = 10e9 if j % 2 else 40e9
+        links[("e0", s)] = Link(rate)
+        links[(s, "e0")] = Link(rate)
+    return CollabTopology(
+        host="e0", secondaries=secs, platforms=platforms,
+        links=links, default_link=Link(40e9),
+    )
+
+
+def bench_nets(smoke: bool) -> dict:
+    if smoke:
+        return {
+            "vgg16": vgg16_geom(in_rows=64),
+            "vit_l16": vit_l16_geom(in_rows=64, n_blocks=2),
+        }
+    return {"vgg16": vgg16_geom(), "vit_l16": vit_l16_geom()}
+
+
+def _result_record(res, plan_elapsed_s: float) -> dict:
+    return dict(
+        makespan=res.makespan,
+        ratios=list(res.ratios),
+        overlap_rows=res.overlap_rows,
+        assignment=list(res.schemes) if res.schemes is not None else None,
+        evaluations=res.evaluations,
+        comm_bytes_per_stage=comm_bytes_per_stage(res.plan),
+        elapsed_s=plan_elapsed_s,
+    )
+
+
+def run_cell(net, topology, max_rounds: int = 4) -> dict:
+    """One grid cell: halo-only optimum, then the joint scheme search seeded
+    at its ratios (so the enlarged space can only match or improve)."""
+    t0 = time.perf_counter()
+    halo = optimize_plan(net, topology, schemes=(SCHEME_HALO,), max_rounds=max_rounds)
+    t_halo = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    searched = optimize_plan(
+        net, topology, schemes=SCHEMES,
+        init_ratios=halo.ratios, max_rounds=max_rounds,
+    )
+    t_search = time.perf_counter() - t0
+    return dict(
+        halo_only=_result_record(halo, t_halo),
+        searched=_result_record(searched, t_search),
+        reduction=1.0 - searched.makespan / halo.makespan,
+    )
+
+
+def run_all(smoke: bool = False, out_path: str | None = "BENCH_schemes.json") -> dict:
+    nets = bench_nets(smoke)
+    cells: dict[str, dict] = {}
+    for net_name, net in nets.items():
+        for topo_name, topo in (("sym", sym_topology()), ("skew", skew_topology())):
+            cells[f"{net_name}/{topo_name}"] = run_cell(net, topo)
+    reductions = {k: c["reduction"] for k, c in cells.items()}
+    out = dict(
+        smoke=smoke,
+        nets={
+            name: dict(
+                in_rows=net.in_rows,
+                n_layers=len(net.layers),
+                n_stages=len(stage_spans(net)),
+            )
+            for name, net in nets.items()
+        },
+        cells=cells,
+        min_reduction=min(reductions.values()),
+        max_reduction=max(reductions.values()),
+    )
+
+    print(f"{'cell':16s} {'halo-only (ms)':>14s} {'searched (ms)':>13s} "
+          f"{'reduction':>9s}  assignment")
+    for key, cell in cells.items():
+        a = cell["searched"]["assignment"]
+        short = "all-halo" if a is None else ",".join(s[:4] for s in a[:6]) + (
+            ",..." if len(a) > 6 else "")
+        print(
+            f"{key:16s} {cell['halo_only']['makespan']*1e3:14.3f} "
+            f"{cell['searched']['makespan']*1e3:13.3f} "
+            f"{cell['reduction']:8.1%}  {short}"
+        )
+        print(f"scheme_sweep_{key.replace('/', '_')},"
+              f"{cell['searched']['makespan']*1e6:.1f},{cell['reduction']:.4f}")
+    print(f"\nreduction range: {out['min_reduction']:.1%} .. "
+          f"{out['max_reduction']:.1%}")
+    if out_path:
+        with open(out_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized nets")
+    ap.add_argument("--out", default="BENCH_schemes.json")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, out_path=args.out)

@@ -6,17 +6,35 @@ service-reliability model (reliability), online joint compute+link adaptive
 re-planning with a plan cache (replan), a persistent content-keyed plan store
 for warm starts across restarts (planstore), and per-task heterogeneous
 placement over a shared ES pool (placement)."""
-from .nets import ConvNetGeom, vgg16_geom
-from .optimizer import OptimizeResult, equal_ratios, evaluate_plan, optimize_plan
+from .nets import ConvNetGeom, vgg16_geom, vit_l16_geom
+from .optimizer import (
+    OptimizeResult,
+    equal_ratios,
+    evaluate_plan,
+    evaluate_scheme_assignment,
+    optimize_plan,
+)
 from .partition import (
     HALPPlan,
     PlanInfeasible,
+    SCHEME_HALO,
+    SCHEME_HOST,
+    SCHEME_HS,
+    SCHEME_NP,
+    SCHEMES,
+    SchemePlan,
+    SchemeSegment,
     Segment,
+    baseline_assignment,
+    comm_bytes_per_stage,
     plan_even,
     plan_halp,
     plan_halp_n,
     plan_halp_topology,
+    plan_scheme,
     split_rows,
+    stage_scheme_options,
+    stage_spans,
 )
 from .placement import (
     PlacementController,
@@ -48,9 +66,11 @@ from .replan import (
     rate_bucket,
     topology_fingerprint,
 )
+from .events import SchemeBatchEvaluator, build_scheme_dag, simulate_scheme
 from .rf import (
     LayerGeom,
     RFState,
+    attn,
     input_range_exact,
     input_range_paper,
     out_size,

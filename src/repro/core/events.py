@@ -29,10 +29,15 @@ from .nets import ConvNetGeom, DTYPE_BYTES
 from .partition import (
     HALPPlan,
     PlanLayout,
+    SCHEME_HALO,
+    SCHEME_HOST,
+    SCHEMES,
+    SchemeLayout,
     Segment,
     plan_from_layout,
     plan_halp_topology,
     plan_layout,
+    scheme_layout,
 )
 from .topology import CollabTopology
 
@@ -46,9 +51,12 @@ __all__ = [
     "resolve_halp_setup",
     "build_halp_dag",
     "build_multitask_dag",
+    "build_scheme_dag",
     "DagTemplate",
     "HalpBatchEvaluator",
     "MultitaskBatchEvaluator",
+    "SchemeBatchEvaluator",
+    "simulate_scheme",
 ]
 
 
@@ -301,7 +309,8 @@ class _RecordingPricer(_FloatPricer):
 
 
 def _lay_halp_dag(
-    sim, plans: list[HALPPlan], topology: CollabTopology, sec_res, pricer=None
+    sim, plans: list[HALPPlan], topology: CollabTopology, sec_res, pricer=None,
+    roots: Sequence[int | None] | None = None,
 ) -> list[int]:
     """Shared DAG builder behind both multi-task deployments.
 
@@ -316,12 +325,20 @@ def _lay_halp_dag(
     ``pricer`` turns (numerator lane, row count, resource) into a job
     duration; the default prices exact floats, a :class:`_RecordingPricer`
     additionally captures the factorisation for :class:`DagTemplate`.
+
+    ``roots`` optionally gates each task's entry (initial slices and the
+    host's first zone chunk) on an existing job -- mixed-scheme plans use
+    this to chain a halo segment behind the previous segment's barrier.  The
+    default (all None) is structurally identical to no gate (:meth:`Sim.add`
+    drops None deps), so standalone builds are untouched bit-for-bit.
     """
     net = plans[0].net
     host = plans[0].host
     n_layers = len(net.layers)
     pr = pricer if pricer is not None else _FloatPricer(net, topology)
     num_cmp, num_msg = pr.num_cmp, pr.num_msg
+    if roots is None:
+        roots = [None] * len(plans)
 
     # Clone deployments pass the *same* plan object once per task; memoise the
     # step walks per distinct plan so n_tasks cost only one plan-walk each.
@@ -354,8 +371,11 @@ def _lay_halp_dag(
                 f"int[{t}]{s}",
                 f"link:{host}->{sec_res(t, s)}",
                 pr.com(host, s, pr.num_init, plan.parts[0].inp[s].rows),
+                [roots[t]],
             )
             sec_gate[(t, s, 0)] = [jid]
+        if roots[t] is not None:
+            last_chunk[(t, host)] = roots[t]
 
     for i in range(n_layers):
         # --- secondaries: dep chunk first, then rest; send dep while resting.
@@ -760,3 +780,350 @@ class MultitaskBatchEvaluator:
                     per_task_finish=tuple(finishes),
                 )
         return results
+
+
+# --------------------------------------------------------------------------
+# Mixed-scheme DAGs: halo segments + hub-relayed (NP / head-sequence) segments
+# priced through the same template machinery.
+# --------------------------------------------------------------------------
+
+class _SegmentLanes:
+    """Duration lanes of one halo *segment* (its sub-net), delegating the
+    actual pricing to the outer pricer so a :class:`_RecordingPricer` keeps
+    accumulating one factorisation across every segment of a scheme DAG."""
+
+    def __init__(self, base, sub_net: ConvNetGeom):
+        self._base = base
+        self.num_cmp = _row_flops(sub_net)
+        sizes = sub_net.sizes()
+        self.num_msg = [
+            8.0 * DTYPE_BYTES * sizes[i + 1] * g.c_out
+            for i, g in enumerate(sub_net.layers)
+        ]
+        self.num_init = 8.0 * DTYPE_BYTES * sub_net.in_rows * sub_net.in_channels
+        self.num_head = sub_net.head_flops  # 0.0: segment heads are barriers
+
+    def cmp(self, es: str, num: float, rows: float) -> float:
+        return self._base.cmp(es, num, rows)
+
+    def com(self, src: str, dst: str, num: float, rows: float) -> float:
+        return self._base.com(src, dst, num, rows)
+
+
+def _lay_scheme_dag(
+    sim,
+    slayout: SchemeLayout,
+    n_tasks: int,
+    topology: CollabTopology,
+    sec_res,
+    pricer=None,
+) -> list[int]:
+    """Lay the job/message DAG of a mixed-scheme plan for ``n_tasks`` tasks.
+
+    Segments chain through per-task *barriers* (the job after which the host
+    holds the segment's full output):
+
+    * **halo** segments re-enter :func:`_lay_halp_dag` on their sub-net with
+      ``roots`` gating the entry -- identical structure and lanes to a
+      standalone halo DAG of those layers, so the pure-halo scheme plan prices
+      float-identically to the legacy path;
+    * **host_solo** segments are one host job per layer per task;
+    * **hub** segments (non_penetrative / head_sequence) lay, per relay layer,
+      an upload per secondary (its held slice of the layer's input), a
+      download per secondary (what it lacks), and a sliced compute job;
+      transfer-free layers (``relay=False`` in
+      :func:`~repro.core.partition.hub_segment_fracs`) lay only the computes,
+      so channel-local / row-local runs never synchronise across secondaries.
+      A final gather + zero-duration host merge closes the segment.
+
+    Job quantities are exactly mirrored by :func:`_scheme_quantities` (the
+    template self-check enforces it bit-for-bit).  Returns the per-task head
+    job ids."""
+    net = slayout.net
+    host = slayout.host
+    secs = slayout.secondaries
+    sizes = net.sizes()
+    pr = pricer if pricer is not None else _FloatPricer(net, topology)
+    cursor: list[int | None] = [None] * n_tasks
+    for seg_idx, seg in enumerate(slayout.segments):
+        if seg.scheme == SCHEME_HALO:
+            lay = slayout.halo_layouts[seg_idx]
+            sub_plan = plan_from_layout(lay)
+            lanes = _SegmentLanes(pr, lay.net)
+            heads = _lay_halp_dag(
+                sim, [sub_plan] * n_tasks, topology, sec_res,
+                pricer=lanes, roots=cursor,
+            )
+            cursor = list(heads)
+            continue
+        if seg.scheme == SCHEME_HOST:
+            for i in range(seg.start, seg.stop + 1):
+                flops = net.layer_flops(i)
+                for t in range(n_tasks):
+                    cursor[t] = sim.add(
+                        f"solo[{t}].g{i}", host, pr.cmp(host, flops, 1.0), [cursor[t]]
+                    )
+            continue
+        # hub segment (non_penetrative / head_sequence)
+        fracs, final = slayout.hub_fracs[seg_idx]
+        sec_prev: dict[tuple[int, int], int] = {}
+        for off, (relay, up, down, share) in enumerate(fracs):
+            i = seg.start + off
+            g = net.layers[i]
+            flops = net.layer_flops(i)
+            bits_in = 8.0 * DTYPE_BYTES * sizes[i] * sizes[i] * g.c_in
+            downs: dict[tuple[int, int], int] = {}
+            if relay:
+                ups: dict[int, list[int]] = {}
+                for t in range(n_tasks):
+                    for j, s in enumerate(secs):
+                        ups.setdefault(t, []).append(
+                            sim.add(
+                                f"up[{t}]{s}.g{i}",
+                                f"link:{sec_res(t, s)}->{host}",
+                                pr.com(s, host, bits_in, up[j]),
+                                [sec_prev.get((t, j))],
+                            )
+                        )
+                for t in range(n_tasks):
+                    for j, s in enumerate(secs):
+                        downs[(t, j)] = sim.add(
+                            f"down[{t}]{s}.g{i}",
+                            f"link:{host}->{sec_res(t, s)}",
+                            pr.com(host, s, bits_in, down[j]),
+                            ups[t] + [cursor[t]],
+                        )
+            for t in range(n_tasks):
+                for j, s in enumerate(secs):
+                    sec_prev[(t, j)] = sim.add(
+                        f"cmp[{t}]{s}.g{i}",
+                        sec_res(t, s),
+                        pr.cmp(s, flops, share[j]),
+                        [downs.get((t, j)), sec_prev.get((t, j))],
+                    )
+        g = net.layers[seg.stop]
+        bits_out = 8.0 * DTYPE_BYTES * sizes[seg.stop + 1] * sizes[seg.stop + 1] * g.c_out
+        fins: dict[int, list[int]] = {}
+        for t in range(n_tasks):
+            for j, s in enumerate(secs):
+                fins.setdefault(t, []).append(
+                    sim.add(
+                        f"gather[{t}]{s}.g{seg.stop}",
+                        f"link:{sec_res(t, s)}->{host}",
+                        pr.com(s, host, bits_out, final[j]),
+                        [sec_prev.get((t, j))],
+                    )
+                )
+        for t in range(n_tasks):
+            cursor[t] = sim.add(
+                f"merge[{t}].g{seg.stop}", host, pr.cmp(host, 0.0, 1.0),
+                fins[t] + [cursor[t]],
+            )
+    heads = []
+    for t in range(n_tasks):
+        heads.append(
+            sim.add(f"head[{t}]", host, pr.cmp(host, pr.num_head, 1.0), [cursor[t]])
+        )
+    return heads
+
+
+def build_scheme_dag(
+    sim, slayout: SchemeLayout, n_tasks: int, topology: CollabTopology
+) -> list[int]:
+    """Public mixed-scheme twin of :func:`build_halp_dag` (per-task secondary
+    clones).  Returns the head job id of every task."""
+    return _lay_scheme_dag(sim, slayout, n_tasks, topology, lambda t, s: f"{s}^{t}")
+
+
+def _scheme_quantities(slayout: SchemeLayout, n_tasks: int) -> np.ndarray:
+    """Per-job quantities of one mixed-scheme candidate, in the exact order
+    :func:`_lay_scheme_dag` prices jobs (the scheme twin of
+    :func:`_layout_quantities`; divergence is caught bit-exactly by the
+    template self-check)."""
+    vals: list[float] = []
+    n_secs = len(slayout.secondaries)
+    for seg_idx, seg in enumerate(slayout.segments):
+        if seg.scheme == SCHEME_HALO:
+            lay = slayout.halo_layouts[seg_idx]
+            vals += _layout_quantities([lay] * n_tasks).tolist()
+            # drop the sub-DAG's per-task head quantities? no: _layout_
+            # quantities already includes them (the sub-head is a real job).
+            continue
+        if seg.scheme == SCHEME_HOST:
+            vals += [1.0] * ((seg.stop - seg.start + 1) * n_tasks)
+            continue
+        fracs, final = slayout.hub_fracs[seg_idx]
+        for relay, up, down, share in fracs:
+            if relay:
+                for _t in range(n_tasks):
+                    vals += up
+                for _t in range(n_tasks):
+                    vals += down
+            for _t in range(n_tasks):
+                vals += share
+        for _t in range(n_tasks):
+            vals += final
+        vals += [1.0] * n_tasks  # merge barriers
+    vals += [1.0] * n_tasks  # heads
+    return np.array(vals)
+
+
+def _scheme_template(
+    slayout: SchemeLayout, n_tasks: int, topology: CollabTopology
+) -> DagTemplate:
+    """Lay the scheme DAG once, record its duration factorisation, and verify
+    the quantity walk reproduces the scalar builder bit-for-bit."""
+    from .simulator import Sim  # runtime import: simulator imports events
+
+    sim = Sim()
+    pricer = _RecordingPricer(slayout.net, topology)
+    heads = _lay_scheme_dag(
+        sim, slayout, n_tasks, topology, lambda t, s: f"{s}^{t}", pricer=pricer
+    )
+    tmpl = DagTemplate(
+        sim=sim,
+        heads=tuple(heads),
+        nums=np.array(pricer.nums),
+        den_ids=np.array(pricer.den_ids),
+        den_kinds=tuple(pricer.den_kinds),
+    )
+    quantities = _scheme_quantities(slayout, n_tasks)
+    if len(quantities) != len(sim.jobs):
+        raise AssertionError(
+            f"scheme quantity walk produced {len(quantities)} entries for "
+            f"{len(sim.jobs)} builder jobs -- the walks fell out of step"
+        )
+    ref = tmpl.durations(quantities, topology)[0]
+    got = np.array([job.duration for job in sim.jobs])
+    if not np.array_equal(ref, got):
+        bad = int(np.flatnonzero(ref != got)[0])
+        raise AssertionError(
+            f"scheme template durations diverge from the scalar builder at "
+            f"job {bad} ({sim.jobs[bad].name}): {ref[bad]} != {got[bad]}"
+        )
+    return tmpl
+
+
+def _scheme_layout_cached(
+    net: ConvNetGeom,
+    secondaries: tuple[str, ...],
+    host: str,
+    overlap_rows: int,
+    ratios: tuple[float, ...],
+    assignment: tuple[str, ...],
+    auto_reduce: bool = True,
+) -> SchemeLayout | None:
+    """Process-wide scheme-layout cache (rates never enter the key), sharing
+    the halo layout cache's store and eviction.  False remembers infeasible
+    assignments (a halo segment that cannot be realised)."""
+    key = ("scheme", net, secondaries, host, overlap_rows, ratios, assignment, auto_reduce)
+    hit = _LAYOUTS.get(key)
+    if hit is None:
+        try:
+            hit = scheme_layout(
+                net,
+                secondaries,
+                host=host,
+                overlap_rows=overlap_rows,
+                ratios=ratios,
+                assignment=assignment,
+                auto_reduce=auto_reduce,
+            )
+        except (AssertionError, ValueError):
+            hit = False
+        _LAYOUTS[key] = hit
+        if len(_LAYOUTS) > _LAYOUT_CAPACITY:
+            _LAYOUTS.popitem(last=False)
+    else:
+        _LAYOUTS.move_to_end(key)
+    return hit or None
+
+
+def simulate_scheme(
+    net: ConvNetGeom,
+    topology: CollabTopology,
+    ratios=None,
+    overlap_rows: int = 4,
+    assignment: Sequence[str] | None = None,
+    schemes: Sequence[str] = SCHEMES,
+    n_tasks: int = 1,
+    auto_reduce: bool = True,
+) -> dict:
+    """Scalar DES makespan of one mixed-scheme plan (the scheme twin of
+    :func:`~repro.core.simulator.simulate_halp`); the batched evaluator is
+    pinned float-equal to this path in ``tests/test_conformance.py``."""
+    from .simulator import Sim  # runtime import: simulator imports events
+
+    if ratios is None:
+        ratios = topology.capacity_ratios()
+    slay = scheme_layout(
+        net,
+        topology.secondaries,
+        host=topology.host,
+        overlap_rows=overlap_rows,
+        ratios=ratios,
+        assignment=assignment,
+        schemes=schemes,
+        auto_reduce=auto_reduce,
+    )
+    sim = Sim()
+    heads = _lay_scheme_dag(sim, slay, n_tasks, topology, lambda t, s: f"{s}^{t}")
+    total = sim.run()
+    return dict(total=total, sim=sim, layout=slay, heads=tuple(heads))
+
+
+class SchemeBatchEvaluator:
+    """Batched (ratios, overlap, scheme-assignment) candidate pricing.
+
+    The joint-search twin of :class:`HalpBatchEvaluator`: candidates sharing a
+    structural signature (same fused segments, same halo sub-signatures) share
+    one :class:`DagTemplate` and are priced in one vectorized
+    :meth:`Sim.run_batch` sweep.  Scores are float-identical to
+    :func:`simulate_scheme`'s scalar path."""
+
+    def __init__(
+        self,
+        net: ConvNetGeom,
+        topology: CollabTopology,
+        n_tasks: int = 1,
+        auto_reduce: bool = True,
+    ):
+        self.net = net
+        self.topology = topology
+        self.n_tasks = n_tasks
+        self.auto_reduce = auto_reduce
+
+    def layout_for(self, ratios, overlap_rows: int, assignment) -> SchemeLayout | None:
+        return _scheme_layout_cached(
+            self.net,
+            self.topology.secondaries,
+            self.topology.host,
+            overlap_rows,
+            tuple(ratios),
+            tuple(assignment),
+            self.auto_reduce,
+        )
+
+    def evaluate(self, candidates: Sequence[tuple]) -> list[float]:
+        """DES makespans for ``(ratios, overlap_rows, assignment)`` candidates
+        (+inf when infeasible), batched by structural signature."""
+        scores = [float("inf")] * len(candidates)
+        by_sig: dict[tuple, list[tuple[int, SchemeLayout]]] = {}
+        for k, (ratios, w, assignment) in enumerate(candidates):
+            lay = self.layout_for(ratios, w, assignment)
+            if lay is not None:
+                by_sig.setdefault(lay.signature, []).append((k, lay))
+        for sig, members in by_sig.items():
+            key = ("scheme", self.net, self.topology.host, self.n_tasks, sig)
+            first = members[0][1]
+            tmpl = _template_for(
+                key,
+                lambda lay=first: _scheme_template(lay, self.n_tasks, self.topology),
+            )
+            q = np.stack(
+                [_scheme_quantities(lay, self.n_tasks) for _k, lay in members]
+            )
+            run = tmpl.run(q, self.topology)
+            for row, (k, _lay) in enumerate(members):
+                scores[k] = float(run.makespan[row])
+        return scores

@@ -10,9 +10,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
-from .rf import LayerGeom, conv, pool, out_size
+from .rf import LayerGeom, attn, conv, pool, out_size
 
-__all__ = ["ConvNetGeom", "vgg16_geom", "DTYPE_BYTES"]
+__all__ = ["ConvNetGeom", "vgg16_geom", "vit_l16_geom", "DTYPE_BYTES"]
 
 DTYPE_BYTES = 4  # paper assumes float32 tensors (eq. 10 note)
 
@@ -83,4 +83,37 @@ def vgg16_geom(in_rows: int = 224) -> ConvNetGeom:
     head = sum(2.0 * a * b for a, b in fc)
     return ConvNetGeom(
         name="vgg16", in_rows=in_rows, in_channels=3, layers=tuple(layers), head_flops=head
+    )
+
+
+def vit_l16_geom(
+    in_rows: int = 224,
+    patch: int = 16,
+    n_blocks: int = 24,
+    d: int = 1024,
+    heads: int = 16,
+    d_ff: int = 4096,
+    num_classes: int = 1000,
+    name: str = "vit_l16",
+) -> ConvNetGeom:
+    """ViT-L/16 as a spatial geometry: a patch-embedding conv (k=s=patch)
+    followed by ``n_blocks`` of [attn, 1x1 out-projection, 1x1 MLP-up, 1x1
+    MLP-down] over the H/patch x W/patch token grid, plus a classifier head.
+
+    Residual adds and layernorms are FLOP-negligible next to the matmuls and
+    byte-identical to the 1x1 outputs, so the analytical geometry omits them;
+    the runnable counterpart in ``repro.models.vit_spatial`` matches this
+    layer-for-layer so ``run_plan`` losslessness can be checked shape-exactly.
+    The attention layers mean this net has *no* valid row/halo partitioning --
+    it exists to exercise the head/sequence scheme.
+    """
+    layers: list[LayerGeom] = [conv("patch", 3, d, k=patch, s=patch, p=0)]
+    for b in range(n_blocks):
+        layers.append(attn(f"attn{b}", d, heads))
+        layers.append(conv(f"proj{b}", d, d, k=1, s=1, p=0))
+        layers.append(conv(f"mlp{b}_up", d, d_ff, k=1, s=1, p=0))
+        layers.append(conv(f"mlp{b}_dn", d_ff, d, k=1, s=1, p=0))
+    head = 2.0 * d * num_classes
+    return ConvNetGeom(
+        name=name, in_rows=in_rows, in_channels=3, layers=tuple(layers), head_flops=head
     )

@@ -64,7 +64,7 @@ __all__ = ["PLAN_SCHEMA_VERSION", "canonical_key", "key_hash", "PlanStore"]
 # PlacementResult object graphs (plans, layouts, topologies).  Reads require
 # an exact match, so bumping this invalidates every existing store in one
 # line -- the explicit upgrade path for refactors that change plan shape.
-PLAN_SCHEMA_VERSION = 1
+PLAN_SCHEMA_VERSION = 2  # v2: OptimizeResult grew `schemes`; plans may be SchemePlan
 
 
 def canonical_key(key) -> str:

@@ -82,9 +82,10 @@ from typing import Mapping
 
 import numpy as np
 
+from .events import simulate_scheme
 from .nets import ConvNetGeom
 from .optimizer import OptimizeResult, optimize_plan
-from .partition import HALPPlan
+from .partition import HALPPlan, SCHEME_HALO, SchemePlan
 from .schedule import halp_closed_form
 from .topology import CollabTopology, Link
 
@@ -386,6 +387,15 @@ class ReplanConfig:
     # closed-form search when the re-plan latency budget is tight (it stays a
     # safe choice for single-task controllers, where the two engines agree).
     use_simulator: bool = True
+    # Per-stage partitioning-scheme vocabulary handed to the optimizer.  The
+    # halo-only default keeps every miss on the legacy search (bit-identical
+    # plans).  A larger vocabulary enlarges the searched space, so it IS part
+    # of the cache fingerprint -- two controllers with different vocabularies
+    # must never share an entry, while the pricing `engine` still does not
+    # key (bit-identical scores either way).  Scheme vocabularies beyond the
+    # default require the DES objective (the closed form is halo-only), so
+    # use_simulator=False with a non-trivial vocabulary raises.
+    schemes: tuple[str, ...] = (SCHEME_HALO,)
 
 
 def _optimize_against(
@@ -393,6 +403,12 @@ def _optimize_against(
 ) -> OptimizeResult:
     """One plan optimisation against the given topology's rates."""
     objective = None
+    if not config.use_simulator and tuple(config.schemes) != (SCHEME_HALO,):
+        raise ValueError(
+            "use_simulator=False prices through the halo-only closed form; "
+            f"the scheme vocabulary {tuple(config.schemes)} needs the DES "
+            "objective (use_simulator=True)"
+        )
     if not config.use_simulator:
 
         def objective(ratios: tuple[float, ...], w: int) -> float:
@@ -417,6 +433,7 @@ def _optimize_against(
         engine=config.engine,
         eval_budget=config.eval_budget,
         tol=config.tol,
+        schemes=tuple(config.schemes),
     )
 
 
@@ -512,6 +529,9 @@ class ReplanController:
             # batched and scalar controllers share entries by design
             config.eval_budget,
             config.tol,
+            # the scheme vocabulary changes the searched space (and hence the
+            # plan a miss produces), so it keys like the search bounds do
+            tuple(config.schemes),
         )
         self._active = self._bucket_key()
         self._pending_count = 0  # consecutive epochs spent outside the active bands
@@ -692,11 +712,23 @@ class ReplanController:
     def _price_batch(self, batch_size: int) -> float:
         """Price the active operating point at ``batch_size`` concurrent
         tasks (closed form here; :class:`~repro.core.placement.\
-PlacementController` overrides with the shared-secondary multi-task DES)."""
+PlacementController` overrides with the shared-secondary multi-task DES).
+        Mixed-scheme plans have no closed form: they price through the scheme
+        DES at ``n_tasks=batch_size`` instead."""
+        plan = self._active_result().plan
+        if isinstance(plan, SchemePlan):
+            return simulate_scheme(
+                self.net,
+                self.estimated_topology(),
+                ratios=plan.ratios,
+                overlap_rows=plan.overlap_rows,
+                assignment=plan.assignment,
+                n_tasks=batch_size,
+            )["total"]
         return halp_closed_form(
             self.net,
             topology=self.estimated_topology(),
-            plan=self._active_result().plan,
+            plan=plan,
             n_tasks=batch_size,
         )["total"]
 

@@ -34,6 +34,7 @@ __all__ = [
     "input_range_exact",
     "input_range_paper",
     "propagate_range",
+    "attn",
     "conv",
     "pool",
 ]
@@ -41,19 +42,24 @@ __all__ = [
 
 @dataclass(frozen=True)
 class LayerGeom:
-    """Geometry of one sliding-window layer (conv or pool).
+    """Geometry of one layer: sliding-window (conv/pool/depthwise) or attention.
 
     Row/column symmetric (the paper partitions along rows of square tensors).
-    ``c_in``/``c_out`` are carried for FLOP and byte accounting.
+    ``c_in``/``c_out`` are carried for FLOP and byte accounting.  An ``attn``
+    layer is multi-head self-attention over the H*W token grid: shape-wise the
+    identity window (k=1, s=1, p=0), but *every* output row depends on *every*
+    input row, so the receptive-field partitioner must never row-split it --
+    ``heads`` carries the head count for head/sequence-split accounting instead.
     """
 
     name: str
-    kind: str  # "conv" | "pool" | "depthwise"
+    kind: str  # "conv" | "pool" | "depthwise" | "attn"
     k: int
     s: int = 1
     p: int = 0
     c_in: int = 1
     c_out: int = 1
+    heads: int = 1
 
     def out_rows(self, in_rows: int) -> int:
         return out_size(in_rows, self.k, self.s, self.p)
@@ -64,12 +70,24 @@ class LayerGeom:
             return 2.0 * self.k * self.k * self.c_in * self.c_out * out_width
         if self.kind == "depthwise":
             return 2.0 * self.k * self.k * self.c_out * out_width
+        if self.kind == "attn":
+            # Per token of the row: QKV projections (3 * 2*d^2) plus scores and
+            # weighted values against all S = out_width^2 tokens (2 * 2*S*d).
+            d, tokens = self.c_in, out_width * out_width
+            return out_width * (6.0 * d * d + 4.0 * tokens * d)
         # pooling: one compare/add per window element
         return float(self.k * self.k * self.c_out * out_width)
 
 
 def conv(name: str, c_in: int, c_out: int, k: int = 3, s: int = 1, p: int = 1) -> LayerGeom:
     return LayerGeom(name=name, kind="conv", k=k, s=s, p=p, c_in=c_in, c_out=c_out)
+
+
+def attn(name: str, d: int, heads: int) -> LayerGeom:
+    """Multi-head self-attention over the spatial token grid (d = model width)."""
+    if d % heads:
+        raise ValueError(f"model width {d} not divisible by {heads} heads")
+    return LayerGeom(name=name, kind="attn", k=1, s=1, p=0, c_in=d, c_out=d, heads=heads)
 
 
 def pool(name: str, c: int, k: int = 2, s: int = 2, p: int = 0) -> LayerGeom:

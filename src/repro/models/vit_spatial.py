@@ -1,0 +1,120 @@
+"""ViT-L/16 as a *spatial* layer stack runnable by the HALP executor.
+
+The transformer is expressed over the H/patch x W/patch token grid in NHWC --
+a patch-embedding conv followed by blocks of [multi-head self-attention, 1x1
+out-projection, 1x1 MLP-up, 1x1 MLP-down] -- aligned layer-for-layer with the
+analytical geometry ``repro.core.nets.vit_l16_geom`` so the scheme planner can
+drive it through ``repro.spatial.partition_apply.run_plan``:
+
+* the 1x1 convs are row-splittable (head_sequence's token-row shards) and
+  channel-splittable (non_penetrative's filter shards);
+* the attention layer is head-splittable: Q/K/V projections are stored
+  head-major in their last axis, so slicing every param's last axis by a head
+  range yields exactly that shard of the concatenated attention output.
+
+Residual adds, layernorms, and the softmax head's centering are omitted (as in
+the geometry: FLOP-negligible and byte-identical to the 1x1 outputs); the
+activation after each conv is ReLU purely for parity with
+``repro.models.vgg.apply_layer`` -- the partitioning algebra is elementwise-
+activation-agnostic, and losslessness tests compare this model to itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.nets import ConvNetGeom, vit_l16_geom
+from ..core.rf import LayerGeom
+from .common import Params, conv_params, dense_params, keygen
+from .layers import conv2d, dense, global_avg_pool, relu
+
+__all__ = ["ViTSpatialConfig", "init", "apply_layer", "features", "head", "apply"]
+
+
+@dataclass(frozen=True)
+class ViTSpatialConfig:
+    name: str = "vit_l16"
+    img_res: int = 224
+    patch: int = 16
+    in_channels: int = 3
+    n_blocks: int = 24
+    d: int = 1024
+    heads: int = 16
+    d_ff: int = 4096
+    num_classes: int = 1000
+
+    def geom(self) -> ConvNetGeom:
+        return vit_l16_geom(
+            in_rows=self.img_res,
+            patch=self.patch,
+            n_blocks=self.n_blocks,
+            d=self.d,
+            heads=self.heads,
+            d_ff=self.d_ff,
+            num_classes=self.num_classes,
+            name=self.name,
+        )
+
+
+def init(key: jax.Array, cfg: ViTSpatialConfig) -> Params:
+    ks = keygen(key)
+    feats: list[Params] = [conv_params(next(ks), cfg.patch, cfg.in_channels, cfg.d)]
+    for _ in range(cfg.n_blocks):
+        feats.append(
+            {
+                "q": dense_params(next(ks), cfg.d, cfg.d),
+                "k": dense_params(next(ks), cfg.d, cfg.d),
+                "v": dense_params(next(ks), cfg.d, cfg.d),
+            }
+        )
+        feats.append(conv_params(next(ks), 1, cfg.d, cfg.d))
+        feats.append(conv_params(next(ks), 1, cfg.d, cfg.d_ff))
+        feats.append(conv_params(next(ks), 1, cfg.d_ff, cfg.d))
+    return {"features": feats, "head": [dense_params(next(ks), cfg.d, cfg.num_classes)]}
+
+
+def _mhsa(params: Params, geom: LayerGeom, x: jax.Array) -> jax.Array:
+    """Self-attention over the token grid; the local head count is derived
+    from the param shapes so head-range-sliced params (the head_sequence
+    scheme's shards) run through the *same* code as the full layer."""
+    b, h, w, _ = x.shape
+    dh = geom.c_in // geom.heads
+    tokens = x.reshape(b, h * w, -1)
+    q, k, v = (dense(tokens, params[n]) for n in ("q", "k", "v"))
+    n_local = q.shape[-1] // dh
+    s = h * w
+    q = q.reshape(b, s, n_local, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, n_local, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, n_local, dh).transpose(0, 2, 1, 3)
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(float(dh)), axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, n_local * dh)
+    return y.reshape(b, h, w, n_local * dh)
+
+
+def apply_layer(params: Params, geom: LayerGeom, x: jax.Array) -> jax.Array:
+    """One feature layer on (a slice of) the input -- 'VALID' padded, the same
+    primitive contract as ``repro.models.vgg.apply_layer``."""
+    if geom.kind == "attn":
+        return _mhsa(params, geom, x)
+    y = conv2d(x, params, stride=geom.s, padding="VALID")
+    return relu(y)
+
+
+def features(params: Params, cfg: ViTSpatialConfig, x: jax.Array) -> jax.Array:
+    geom = cfg.geom()
+    for p, g in zip(params["features"], geom.layers):
+        if g.kind != "pool" and g.p:
+            x = jnp.pad(x, ((0, 0), (g.p, g.p), (g.p, g.p), (0, 0)))
+        x = apply_layer(p, g, x)
+    return x
+
+
+def head(params: Params, x: jax.Array) -> jax.Array:
+    return dense(global_avg_pool(x), params["head"][0])
+
+
+def apply(params: Params, cfg: ViTSpatialConfig, x: jax.Array) -> jax.Array:
+    """Full forward: patch embed + transformer blocks + pooled classifier."""
+    return head(params, features(params, cfg, x))

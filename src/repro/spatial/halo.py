@@ -407,18 +407,43 @@ def _conv2d_spatial_weighted(
     top, bot = _issue_halos_weighted(x, lo, hi, heights, hs_j, axis_name)
 
     if engine == "pallas" and _pallas_supported(k, s, p, groups, c, wts):
-        # Embed the bottom halo at its dynamic row (right below the valid
-        # region), then run the fused kernel.  The top halo stays a separate
-        # operand -- only tile 0 consumes it -- while the bottom splice is a
-        # pre-kernel dynamic update (the price of ragged shard heights).
         pad_rows = hi + (-(hmax + hi)) % s
         x_ext = (
             jnp.concatenate([x, jnp.zeros((b, pad_rows, w, c), x.dtype)], axis=1)
             if pad_rows else x
         )
+        zero_bot = jnp.zeros((b, hi, w, c), x.dtype) if hi else None
+        n_fix = -(-hi // s)  # valid output rows whose window crosses the bottom edge
+        if hi and min(heights) >= n_fix * s + lo:
+            # Overlapped bottom halo: the kernel never consumes the bottom
+            # ppermute (its bottom operand is zeros and the rows below the
+            # valid region are the layout's zeros), so the scheduler can hide
+            # that collective behind the *whole* kernel, not just its last
+            # tiles.  The last n_fix valid rows -- the only ones whose window
+            # crosses the shard's bottom edge -- are then recomputed by a thin
+            # fix-up conv, the sole consumer of the bottom halo.  The top halo
+            # stays a kernel operand (only tile 0 reads it).
+            y = halo_conv2d(
+                x_ext, top, zero_bot, wts, params.get("b"),
+                stride=s, padding=p, groups=groups, interpret=interpret,
+            )
+            slab = lax.dynamic_slice_in_dim(
+                x, hs_j - n_fix * s - lo, n_fix * s + lo, axis=1
+            )
+            slab = jnp.concatenate([slab, bot], axis=1)
+            if p:
+                slab = jnp.pad(slab, ((0, 0), (0, 0), (p, p), (0, 0)))
+            y_fix = _conv_valid(slab, params, s, groups)
+            y = lax.dynamic_update_slice_in_dim(
+                y[:, :o_max], y_fix, o_j - n_fix, axis=1
+            )
+            return _mask_rows(y, o_j)
+        # Shards too thin to source the fix-up slab locally (or hi == 0):
+        # embed the bottom halo at its dynamic row pre-kernel (the splice
+        # serialises the bottom collective before the kernel, but only rows
+        # shorter than n_fix*s + lo ever take this path).
         if hi:
             x_ext = lax.dynamic_update_slice_in_dim(x_ext, bot, hs_j, axis=1)
-        zero_bot = jnp.zeros((b, hi, w, c), x.dtype) if hi else None
         y = halo_conv2d(
             x_ext, top, zero_bot, wts, params.get("b"),
             stride=s, padding=p, groups=groups, interpret=interpret,

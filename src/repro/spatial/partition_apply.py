@@ -30,7 +30,16 @@ import jax
 import jax.numpy as jnp
 
 from ..core.nets import ConvNetGeom
-from ..core.partition import HALPPlan, Segment
+from ..core.partition import (
+    HALPPlan,
+    SCHEME_HALO,
+    SCHEME_HOST,
+    SCHEME_HS,
+    SCHEME_NP,
+    SchemePlan,
+    Segment,
+    _split_counts,
+)
 from ..core.rf import input_range_exact
 
 __all__ = ["run_plan", "segment_forward"]
@@ -63,7 +72,7 @@ def segment_forward(apply_layer, params, geom, x_rows: jax.Array, seg: Segment,
 
 
 def run_plan(
-    plan: HALPPlan,
+    plan: "HALPPlan | SchemePlan",
     layer_params: list,
     apply_layer,
     x: jax.Array,
@@ -83,7 +92,14 @@ def run_plan(
     :class:`~repro.core.replan.ComputeRateEstimator` expect, with no manual
     bookkeeping in the serving executor.  Timing requires eager per-segment
     execution, so do not wrap the whole ``run_plan`` in ``jax.jit`` when
-    observing (jit ``apply_layer`` instead to keep the kernels compiled)."""
+    observing (jit ``apply_layer`` instead to keep the kernels compiled).
+
+    ``plan`` may also be a :class:`~repro.core.partition.SchemePlan`: each
+    segment then executes under its own scheme (halo segments recurse through
+    this very function on their sub-plan) and the observer receives samples
+    attributed to physical ES names across all segments."""
+    if isinstance(plan, SchemePlan):
+        return _run_scheme_plan(plan, layer_params, apply_layer, x, time_observer)
     net: ConvNetGeom = plan.net
     sizes = net.sizes()
     es_names = plan.es_names
@@ -149,3 +165,164 @@ def run_plan(
     # final merge on the host (paper: sub-outputs -> FL input)
     ordered = sorted(es_names, key=lambda es: plan.parts[-1].out[es].lo)
     return jnp.concatenate([outs[es] for es in ordered if plan.parts[-1].out[es]], axis=1)
+
+
+def _slice_last_axis(params, lo: int, hi: int):
+    """Every array leaf's last axis restricted to ``[lo, hi)`` -- the shared
+    shard selector for output-channel splits (conv ``w``/``b``) and head-major
+    Q/K/V splits (slicing ``[lo*dh, hi*dh)`` picks whole heads)."""
+    return jax.tree_util.tree_map(lambda a: a[..., lo:hi], params)
+
+
+def _bounds(counts: list[int]) -> list[int]:
+    out = [0]
+    for c in counts:
+        out.append(out[-1] + c)
+    return out
+
+
+def _run_scheme_plan(
+    plan: SchemePlan,
+    layer_params: list,
+    apply_layer,
+    x: jax.Array,
+    time_observer: Callable[[str, float, float], None] | None,
+) -> jax.Array:
+    """Execute a mixed-scheme plan segment-by-segment (hub model).
+
+    The host holds the full feature map at every segment boundary.  Halo
+    segments recurse through :func:`run_plan` on their sub-plan (row algebra
+    verified there); hub segments materialise each secondary's shard from
+    *exactly* the slice of parameters/input its scheme prescribes -- a
+    non-penetrative secondary only ever sees its filter slice, a head/sequence
+    secondary its head or token-row range -- and concatenation along the split
+    axis reconstructs the layer output, so equality with the single-device
+    reference proves the scheme's losslessness the same way the halo
+    executor's strict reconstruction does."""
+    net: ConvNetGeom = plan.net
+    sizes = net.sizes()
+    host = plan.host
+    all_es = (*plan.secondaries, host)
+    flops_acc = {es: 0.0 for es in all_es}
+    secs_acc = {es: 0.0 for es in all_es}
+
+    def acc(es: str, fl: float, dt: float) -> None:
+        flops_acc[es] += fl
+        secs_acc[es] += dt
+
+    def timed(es: str, fl: float, fn):
+        if time_observer is None:
+            return fn()
+        t0 = time.perf_counter()
+        y = fn()
+        jax.block_until_ready(y)
+        acc(es, fl, time.perf_counter() - t0)
+        return y
+
+    for seg, hp in zip(plan.segments, plan.halo_plans):
+        if seg.scheme == SCHEME_HALO:
+            sub_obs = (
+                (lambda slot, fl, dt, _hp=hp: acc(_hp.owner_of(slot), fl, dt))
+                if time_observer
+                else None
+            )
+            x = run_plan(
+                hp,
+                layer_params[seg.start : seg.stop + 1],
+                apply_layer,
+                x,
+                time_observer=sub_obs,
+            )
+            continue
+        for off in range(seg.stop - seg.start + 1):
+            i = seg.start + off
+            g = net.layers[i]
+            avail = Segment(1, sizes[i])
+            full_out = Segment(1, sizes[i + 1])
+            if seg.scheme == SCHEME_HOST:
+                x = timed(
+                    host,
+                    net.layer_flops(i),
+                    lambda: segment_forward(
+                        apply_layer, layer_params[i], g, x, full_out, avail, sizes[i]
+                    ),
+                )
+                continue
+            pieces: list[jax.Array] = []
+            if seg.scheme == SCHEME_NP:
+                b = _bounds(_split_counts(g.c_out, plan.ratios))
+                for j, es in enumerate(plan.secondaries):
+                    lo, hi = b[j], b[j + 1]
+                    if lo == hi:
+                        continue
+                    frac = (hi - lo) / g.c_out
+                    if g.kind == "conv":
+                        # dense filters: full input, a slice of the filters
+                        y = timed(
+                            es,
+                            net.layer_flops(i) * frac,
+                            lambda: segment_forward(
+                                apply_layer,
+                                _slice_last_axis(layer_params[i], lo, hi),
+                                g, x, full_out, avail, sizes[i],
+                            ),
+                        )
+                    else:
+                        # channel-local (pool/depthwise): slice of the channels
+                        p = (
+                            _slice_last_axis(layer_params[i], lo, hi)
+                            if layer_params[i]
+                            else layer_params[i]
+                        )
+                        y = timed(
+                            es,
+                            net.layer_flops(i) * frac,
+                            lambda: segment_forward(
+                                apply_layer, p, g, x[..., lo:hi], full_out,
+                                avail, sizes[i],
+                            ),
+                        )
+                    pieces.append(y)
+                x = jnp.concatenate(pieces, axis=-1)
+            elif seg.scheme == SCHEME_HS:
+                if g.kind == "attn":
+                    dh = g.c_in // g.heads
+                    b = _bounds(_split_counts(g.heads, plan.ratios))
+                    for j, es in enumerate(plan.secondaries):
+                        lo, hi = b[j] * dh, b[j + 1] * dh
+                        if lo == hi:
+                            continue
+                        frac = (b[j + 1] - b[j]) / g.heads
+                        y = timed(
+                            es,
+                            net.layer_flops(i) * frac,
+                            lambda: apply_layer(
+                                _slice_last_axis(layer_params[i], lo, hi), g, x
+                            ),
+                        )
+                        pieces.append(y)
+                    x = jnp.concatenate(pieces, axis=-1)
+                else:
+                    b = _bounds(_split_counts(sizes[i + 1], plan.ratios))
+                    for j, es in enumerate(plan.secondaries):
+                        rows = Segment(b[j] + 1, b[j + 1])
+                        if not rows:
+                            continue
+                        y = timed(
+                            es,
+                            net.layer_flops(i, rows.rows),
+                            lambda: segment_forward(
+                                apply_layer, layer_params[i], g, x, rows,
+                                avail, sizes[i],
+                            ),
+                        )
+                        pieces.append(y)
+                    x = jnp.concatenate(pieces, axis=1)
+            else:
+                raise AssertionError(f"unknown scheme {seg.scheme!r}")
+
+    if time_observer:
+        for es in all_es:
+            if flops_acc[es] > 0 and secs_acc[es] > 0:
+                time_observer(es, flops_acc[es], secs_acc[es])
+    return x

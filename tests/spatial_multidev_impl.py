@@ -147,6 +147,34 @@ for (k, s, p, c_in, c_out, g) in [
         got = merge_padded_shards(fn(xp, params), o_hts)
         check(f"weighted conv k{k}s{s}p{p}g{g} {engine} ov={overlap}", got, want)
 
+# --- taller weighted shards: every geometry above takes the *overlapped*
+# bottom-halo pallas path (min height >= n_fix*s + lo, so the kernel runs
+# without the pre-kernel bottom splice and the fix-up conv patches the edge)
+hts_tall = (10, 8, 6, 6, 6, 8, 10, 10)  # sum 64, all even, min 6
+assert sum(hts_tall) == H and min(hts_tall) >= 6  # k7s1p3: n_fix*s + lo = 6
+for (k, s, p, c_in, c_out, g) in [
+    (3, 1, 1, 3, 8, 1),
+    (5, 1, 2, 4, 8, 1),
+    (7, 2, 3, 3, 8, 1),
+    (7, 1, 3, 8, 8, 8),   # depthwise overlapped fix-up
+]:
+    kp, kx, key = (*jax.random.split(key, 2), key)
+    params = conv_params(kp, k, c_in, c_out, groups=g)
+    x = jax.random.normal(kx, (2, H, 17, c_in))
+    want = conv2d(x, params, stride=s, padding=[(p, p), (p, p)], groups=g)
+    fn = shard_map(
+        partial(conv2d_spatial, k=k, s=s, p=p, axis_name="sp",
+                overlap=True, groups=g, engine="pallas", interpret=True,
+                heights=hts_tall),
+        mesh=mesh,
+        in_specs=(P(None, "sp", None, None), P()),
+        out_specs=P(None, "sp", None, None),
+        check_rep=False,
+    )
+    got = merge_padded_shards(fn(to_padded_shards(x, hts_tall), params),
+                              tuple(hh // s for hh in hts_tall))
+    check(f"weighted-tall overlapped-bottom k{k}s{s}p{p}g{g}", got, want)
+
 # weighted max pool: k == s (no halo) and k > s (bottom-halo path)
 x = jax.random.normal(key, (2, H, 16, 4))
 xp = to_padded_shards(x, hts)

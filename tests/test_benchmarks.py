@@ -253,6 +253,57 @@ def test_planstore_bench_artifact_floors():
     assert out["warm"]["store_entries"] == out["cold"]["store_entries"]
 
 
+def test_scheme_sweep_acceptance():
+    """The joint per-stage scheme search must never lose to halo-only
+    planning on any grid cell (it is seeded at the halo-only optimum), must
+    cut the makespan by >= 10% on at least one cell (the attention model,
+    where halo partitioning cannot apply and head splits can), and every
+    cell must carry per-stage comm-byte accounting for both plans."""
+    from benchmarks import scheme_sweep
+
+    out = scheme_sweep.run_all(smoke=True, out_path=None)
+    assert set(out["cells"]) == {
+        "vgg16/sym", "vgg16/skew", "vit_l16/sym", "vit_l16/skew"
+    }
+    for key, cell in out["cells"].items():
+        assert cell["reduction"] >= -1e-12, (key, cell["reduction"])
+        n_stages = out["nets"][key.split("/")[0]]["n_stages"]
+        for rec in (cell["halo_only"], cell["searched"]):
+            bytes_per_stage = rec["comm_bytes_per_stage"]
+            assert len(bytes_per_stage) == n_stages
+            assert all(b >= 0 for b in bytes_per_stage)
+        assert cell["searched"]["makespan"] <= cell["halo_only"]["makespan"]
+    assert out["max_reduction"] >= 0.10, out["max_reduction"]
+    # the attention model's win comes from head splits, not ratio tweaks
+    for topo in ("sym", "skew"):
+        searched = out["cells"][f"vit_l16/{topo}"]["searched"]["assignment"]
+        assert "head_sequence" in searched, searched
+
+
+def test_scheme_bench_artifact_floors():
+    """The committed full-run artifact must cover the full-size nets and
+    carry the tentpole's acceptance numbers (no cell regresses, >= 10%
+    reduction somewhere)."""
+    import json
+
+    path = Path(__file__).resolve().parents[1] / "BENCH_schemes.json"
+    if not path.exists():
+        pytest.skip("BENCH_schemes.json not committed yet")
+    out = json.loads(path.read_text())
+    assert out["smoke"] is False
+    assert out["nets"]["vgg16"]["in_rows"] == 224
+    assert out["nets"]["vit_l16"]["in_rows"] == 224
+    assert out["nets"]["vit_l16"]["n_layers"] == 1 + 24 * 4  # patch + 24 blocks
+    assert set(out["cells"]) == {
+        "vgg16/sym", "vgg16/skew", "vit_l16/sym", "vit_l16/skew"
+    }
+    for key, cell in out["cells"].items():
+        assert cell["reduction"] >= -1e-12, (key, cell["reduction"])
+        assert cell["halo_only"]["comm_bytes_per_stage"]
+        assert cell["searched"]["comm_bytes_per_stage"]
+    assert out["max_reduction"] >= 0.10, out["max_reduction"]
+
+
 def test_roofline_results_complete():
     """Dry-run artifacts exist for all 40 cells x both meshes (ok or recorded
     skip), i.e. deliverables (e)/(g) are materialised."""

@@ -20,6 +20,9 @@ simulator, and any drift in the layout/template factorisation shows up here
 as a single-bit diff.  Hypothesis property tests extend the same claim to
 random plans and random per-resource slowdowns.
 """
+import dataclasses
+import math
+
 import numpy as np
 import pytest
 
@@ -31,10 +34,18 @@ except ImportError:  # container image without hypothesis: deterministic shim
 from repro.core import (
     AGX_XAVIER,
     GTX_1080TI,
+    SCHEME_HALO,
+    SCHEME_NP,
+    SCHEMES,
     CollabTopology,
     Link,
+    SchemeBatchEvaluator,
     halp_closed_form,
+    plan_scheme,
     simulate_halp,
+    simulate_scheme,
+    stage_scheme_options,
+    stage_spans,
     standalone_time,
     vgg16_geom,
 )
@@ -260,6 +271,179 @@ def test_batched_evaluator_property(n_sec, overlap, n_tasks, data):
     batched = evaluator.evaluate([(ratios, overlap)])
     scalar = [evaluate_plan(NET, topo, ratios, overlap, n_tasks=n_tasks)]
     assert batched == scalar
+
+
+# ---------------------------------------------------------------------------
+# Per-stage partitioning schemes: mixed-scheme DAG pricing + lossless execution
+# ---------------------------------------------------------------------------
+#
+# The scheme DAG (``events.build_scheme_dag``) must be the *same simulator* as
+# the legacy HALP DAG wherever the spaces coincide: an all-halo assignment
+# prices float-identically to ``evaluate_plan`` at n_tasks=1 (at n_tasks>1 the
+# scheme DAG serialises segment barriers through the host FIFO, a deliberately
+# tighter ordering, so equality is only claimed for the single-task pricing
+# the planner search uses).  The batched candidate evaluator must equal the
+# scalar engine to float equality on every scheme cell, mirroring the
+# HalpBatchEvaluator contract above.
+
+SCHEME_RATIOS = (0.5, 0.3, 0.2)
+
+
+def _scheme_assignment(net, scheme_kind):
+    spans = stage_spans(net)
+    options = [stage_scheme_options(net, sp, SCHEMES) for sp in spans]
+    if scheme_kind == "halo":
+        return tuple(SCHEME_HALO for _ in spans)
+    if scheme_kind == "non_penetrative":
+        return tuple(SCHEME_NP if SCHEME_NP in o else o[0] for o in options)
+    assert scheme_kind == "mixed"
+    return tuple(
+        (SCHEME_NP if si % 2 else SCHEME_HALO)
+        if (SCHEME_NP if si % 2 else SCHEME_HALO) in opts
+        else opts[0]
+        for si, opts in enumerate(options)
+    )
+
+
+@pytest.mark.parametrize("kind", ["sym", "skew"])
+@pytest.mark.parametrize("scheme_kind", ["halo", "non_penetrative", "mixed"])
+def test_scheme_grid_batched_matches_scalar(scheme_kind, kind):
+    """Every {scheme} x {topology} cell: the batched scheme evaluator equals
+    the scalar DES bit for bit, and the all-halo cells collapse onto the
+    legacy HALP pricing path exactly."""
+    topo = TOPOLOGIES[kind](3)
+    assignment = _scheme_assignment(NET, scheme_kind)
+    total = simulate_scheme(
+        NET, topo, ratios=SCHEME_RATIOS, overlap_rows=4, assignment=assignment
+    )["total"]
+    assert math.isfinite(total) and total > 0
+    batched = SchemeBatchEvaluator(NET, topo).evaluate(
+        [(SCHEME_RATIOS, 4, assignment)]
+    )
+    assert batched == [total]
+    if scheme_kind == "halo":
+        assert total == evaluate_plan(NET, topo, SCHEME_RATIOS, 4, n_tasks=1)
+
+
+def test_all_halo_scheme_plan_is_the_halp_plan():
+    """Choosing halo_segment for every stage must reproduce
+    ``plan_halp_topology``'s plan *exactly* -- the scheme layer is a strict
+    superset of the legacy planner, not a fork of it."""
+    from repro.core import plan_halp_topology
+
+    topo = skew_topology(3)
+    sp = plan_scheme(
+        NET, topo, overlap_rows=4, ratios=SCHEME_RATIOS,
+        assignment=_scheme_assignment(NET, "halo"),
+    )
+    hp = plan_halp_topology(NET, topo, ratios=SCHEME_RATIOS, overlap_rows=4)
+    assert len(sp.segments) == 1  # all-halo stages fuse into one segment
+    assert sp.segments[0].scheme == SCHEME_HALO
+    sub = sp.halo_plans[0]
+    # the segment subnet is the same geometry under a span-suffixed name
+    assert sub.net.layers == hp.net.layers
+    assert sub.net.in_rows == hp.net.in_rows
+    assert dataclasses.replace(sub, net=hp.net) == hp
+
+
+@given(overlap=st.sampled_from([2, 4, 8]), data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_scheme_batched_evaluator_property(overlap, data):
+    """Property: random per-stage scheme assignments and random ratio simplex
+    points price float-identically through the batched evaluator and the
+    scalar scheme DES."""
+    spans = stage_spans(NET)
+    assignment = tuple(
+        data.draw(st.sampled_from(stage_scheme_options(NET, sp, SCHEMES)), label=f"s{si}")
+        for si, sp in enumerate(spans)
+    )
+    raw = [
+        data.draw(st.integers(min_value=1, max_value=9), label=f"r{j}")
+        for j in range(3)
+    ]
+    ratios = tuple(r / sum(raw) for r in raw)
+    topo = skew_topology(3)
+    scalar = simulate_scheme(
+        NET, topo, ratios=ratios, overlap_rows=overlap, assignment=assignment
+    )["total"]
+    batched = SchemeBatchEvaluator(NET, topo).evaluate([(ratios, overlap, assignment)])
+    assert batched == [scalar]
+
+
+_EXEC_CACHE: dict = {}
+
+
+def _exec_setup():
+    """Small runnable VGG (module-level cache; jax imports lazily so the
+    pricing-only tests above stay importable without touching jax)."""
+    if not _EXEC_CACHE:
+        import jax
+
+        from repro.models import vgg
+
+        cfg = vgg.VGGConfig(img_res=64, width_mult=0.125, num_classes=10)
+        params = vgg.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 3))
+        _EXEC_CACHE.update(
+            cfg=cfg, params=params, x=x, ref=vgg.features(params, cfg, x)
+        )
+    return _EXEC_CACHE
+
+
+@given(overlap=st.sampled_from([2, 4]), data=st.data())
+@settings(max_examples=6, deadline=None)
+def test_random_mixed_scheme_plans_execute_lossless(overlap, data):
+    """Property: random mixed-scheme plans (random per-stage assignment drawn
+    from each stage's legal vocabulary, random capacity ratios) execute
+    through ``run_plan`` to the single-device reference within float noise --
+    the executable-losslessness backstop for every scheme, not just halo."""
+    from repro.models import vgg
+    from repro.spatial import run_plan
+
+    env = _exec_setup()
+    net = env["cfg"].geom()
+    spans = stage_spans(net)
+    assignment = tuple(
+        data.draw(st.sampled_from(stage_scheme_options(net, sp, SCHEMES)), label=f"s{si}")
+        for si, sp in enumerate(spans)
+    )
+    raw = [
+        data.draw(st.integers(min_value=1, max_value=3), label=f"r{j}")
+        for j in range(2)
+    ]
+    ratios = tuple(r / sum(raw) for r in raw)
+    topo = sym_topology(2)
+    plan = plan_scheme(
+        net, topo, overlap_rows=overlap, ratios=ratios, assignment=assignment
+    )
+    out = run_plan(plan, env["params"]["features"], vgg.apply_layer, env["x"])
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(env["ref"]), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_joint_scheme_search_engine_equality():
+    """Optimizer engine-equality extended to the enlarged (scheme-per-stage,
+    ratios, overlap) space: batched and scalar engines return the identical
+    plan, score, and assignment, and under an eval budget they also spend the
+    identical number of evaluations before cutting."""
+    from repro.core import optimize_plan
+
+    net = vgg16_geom(in_rows=64)
+    topo = skew_topology(2)
+    kw = dict(overlap_choices=(4,), max_rounds=2, schemes=SCHEMES)
+    rb = optimize_plan(net, topo, engine="batched", **kw)
+    rs = optimize_plan(net, topo, engine="scalar", **kw)
+    assert rb.makespan == rs.makespan
+    assert rb.ratios == rs.ratios
+    assert rb.overlap_rows == rs.overlap_rows
+    assert rb.schemes == rs.schemes
+    assert rb.plan == rs.plan
+    bb = optimize_plan(net, topo, engine="batched", eval_budget=8, **kw)
+    bs = optimize_plan(net, topo, engine="scalar", eval_budget=8, **kw)
+    assert bb.makespan == bs.makespan
+    assert bb.schemes == bs.schemes
+    assert bb.evaluations == bs.evaluations == 8  # the budget binds (full run: 11)
 
 
 @pytest.mark.parametrize("n_tasks", [1, 4])

@@ -18,6 +18,7 @@ sys.path.insert(0, str(REPO))  # tools/ is a plain directory, not a package
 
 from repro.core import (
     PLAN_SCHEMA_VERSION,
+    SCHEMES,
     PlanCache,
     PlanStore,
     ReplanController,
@@ -27,6 +28,7 @@ from repro.core import (
 from tools.precompute_plans import (
     demo_config,
     demo_net,
+    demo_scheme_config,
     demo_topology,
     lattice_keys,
     precompute,
@@ -233,7 +235,8 @@ def test_prime_fills_store_without_adopting(tmp_path):
 def test_cross_process_sharing_one_store_file(tmp_path):
     """A store populated by a *different process* (the precompute tool run
     via subprocess) warm-starts a controller here: the whole lattice serves
-    with zero optimizer calls."""
+    with zero optimizer calls -- for both the halo-only and the
+    scheme-vocabulary controller."""
     path = tmp_path / "plans.sqlite"
     proc = subprocess.run(
         [sys.executable, str(REPO / "tools" / "precompute_plans.py"),
@@ -243,12 +246,17 @@ def test_cross_process_sharing_one_store_file(tmp_path):
     assert proc.returncode == 0, proc.stderr
     assert path.exists()
     with PlanStore(path) as store:
-        assert len(store) == 9  # the smoke lattice is 3 x 3
+        assert len(store) == 12  # 3 x 3 halo lattice + 3-point scheme lattice
         ctrl = _controller(store=store)
         for key in lattice_keys(ctrl, [-1, 0, 1], [-2, -1, 0]):
             ctrl.prime(key)
         assert ctrl.optimizer_calls == 0
         assert ctrl.cache.store_hits == 9
+        sctrl = _controller(store=store, config=demo_scheme_config())
+        for key in lattice_keys(sctrl, [-1, 0, 1], [0]):
+            sctrl.prime(key)
+        assert sctrl.optimizer_calls == 0
+        assert sctrl.cache.store_hits == 3
 
 
 def test_two_controllers_share_one_store_live(tmp_path):
@@ -266,7 +274,8 @@ def test_two_controllers_share_one_store_live(tmp_path):
 
 def test_ci_artifact_store_warm(tmp_path):
     """Store-backed run against the CI-built artifact (set PLANSTORE_ARTIFACT
-    to the uploaded file): every smoke-lattice point must serve warm."""
+    to the uploaded file): every smoke-lattice point must serve warm, under
+    both the halo-only and the scheme-vocabulary config."""
     artifact = os.environ.get("PLANSTORE_ARTIFACT")
     if not artifact or not Path(artifact).exists():
         pytest.skip("PLANSTORE_ARTIFACT not provided")
@@ -275,6 +284,10 @@ def test_ci_artifact_store_warm(tmp_path):
         for key in lattice_keys(ctrl, [-1, 0, 1], [-2, -1, 0]):
             ctrl.prime(key)
         assert ctrl.optimizer_calls == 0, "artifact store must cover the smoke lattice"
+        sctrl = _controller(store=store, config=demo_scheme_config())
+        for key in lattice_keys(sctrl, [-1, 0, 1], [0]):
+            sctrl.prime(key)
+        assert sctrl.optimizer_calls == 0, "artifact must cover the scheme lattice"
 
 
 def test_precompute_is_idempotent(tmp_path):
@@ -284,3 +297,45 @@ def test_precompute_is_idempotent(tmp_path):
     assert first["optimizer_calls"] == 2 and first["store_entries"] == 2
     assert again["optimizer_calls"] == 0 and again["already_stored"] == 2
     assert again["store_entries"] == 2
+
+
+def test_precompute_scheme_lattice_idempotent_and_disjoint(tmp_path):
+    """The scheme-vocabulary lattice is idempotent like the base walk, and
+    keys disjointly: the same operating points under the halo-only config
+    re-optimise rather than serving scheme-vocabulary plans (and vice
+    versa)."""
+    path = str(tmp_path / "plans.sqlite")
+    first = precompute(path, [-1, 0], [0], config=demo_scheme_config())
+    again = precompute(path, [-1, 0], [0], config=demo_scheme_config())
+    assert first["optimizer_calls"] == 2 and first["store_entries"] == 2
+    assert again["optimizer_calls"] == 0 and again["already_stored"] == 2
+    halo = precompute(path, [-1, 0], [0])
+    assert halo["optimizer_calls"] == 2  # zero hits from the scheme rows
+    assert halo["store_entries"] == 4
+
+
+def test_scheme_vocabulary_rekeys_but_engine_does_not(tmp_path):
+    """An enlarged scheme vocabulary searches a bigger space, so it must be
+    part of the plan key (a vocabulary change can never serve a halo-only
+    optimum); the pricing `engine` stays excluded (bit-identical scores
+    either way) -- the engine-exclusion contract, extended."""
+    path = tmp_path / "plans.sqlite"
+    base = dataclasses.replace(demo_config(), use_simulator=True, n_tasks=1)
+    with PlanStore(path) as store:
+        cold = _controller(store=store, config=base)
+        r_base = cold.current()
+        assert cold.optimizer_calls == 1
+    with PlanStore(path) as store:
+        vocab = dataclasses.replace(base, schemes=SCHEMES)
+        ctrl = _controller(store=store, config=vocab)
+        ctrl.current()
+        assert ctrl.optimizer_calls == 1  # re-keyed: zero store hits
+        assert ctrl.stats()["store_hits"] == 0
+        assert len(store) == 2  # both vocabularies' entries coexist
+    with PlanStore(path) as store:
+        repriced = dataclasses.replace(base, engine="scalar")
+        ctrl = _controller(store=store, config=repriced)
+        r_warm = ctrl.current()
+        assert ctrl.optimizer_calls == 0  # engine not in the key: warm hit
+        assert ctrl.stats()["store_hits"] == 1
+        assert r_warm == r_base

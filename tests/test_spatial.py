@@ -270,6 +270,95 @@ def test_run_plan_time_observer_attribution(vgg_setup):
         assert est.rate(es) > 0
 
 
+def _find_jaxpr_with(jaxpr, prim_name):
+    """Innermost (sub-)jaxpr whose own eqn list contains ``prim_name``."""
+    if any(e.primitive.name == prim_name for e in jaxpr.eqns):
+        return jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+            if inner is not None and hasattr(inner, "eqns"):
+                found = _find_jaxpr_with(inner, prim_name)
+                if found is not None:
+                    return found
+    return None
+
+
+def _contains_pallas(eqn):
+    if eqn.primitive.name == "pallas_call":
+        return True
+    for v in eqn.params.values():
+        inner = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+        if inner is not None and hasattr(inner, "eqns"):
+            if any(_contains_pallas(e) for e in inner.eqns):
+                return True
+    return False
+
+
+def test_weighted_pallas_bottom_halo_overlapped():
+    """The fused weighted pallas path must keep the bottom halo OUT of the
+    ``pallas_call``: the kernel runs on local rows + the top halo only, and
+    the bottom ``ppermute`` is consumed solely by the thin post-kernel fix-up
+    conv -- so the scheduler can hide the bottom collective behind the whole
+    kernel rather than just its last tiles (ROADMAP direction 5 note).
+
+    Structural pin: in the traced jaxpr, the bottom ppermute's output must
+    not be an ancestor of any pallas_call input, yet must still reach the
+    function output (through the fix-up).  Plus a numeric losslessness check
+    on the same geometry."""
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.models.common import conv_params
+    from repro.models.layers import conv2d
+    from repro.spatial import conv2d_spatial
+
+    k, s, p = 5, 1, 1  # lo = 1, hi = 3: halo operands distinguishable by rows
+    params = conv_params(jax.random.PRNGKey(0), k, 3, 4)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("sp",))
+    heights = (16,)  # min height 16 >= n_fix*s + lo = 4: overlapped path
+    fn = shard_map(
+        partial(conv2d_spatial, k=k, s=s, p=p, axis_name="sp", overlap=True,
+                engine="pallas", interpret=True, heights=heights),
+        mesh=mesh,
+        in_specs=(P(None, "sp", None, None), P()),
+        out_specs=P(None, "sp", None, None),
+        check_rep=False,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8, 3))
+
+    body = _find_jaxpr_with(jax.make_jaxpr(fn)(x, params).jaxpr, "ppermute")
+    assert body is not None, "no ppermute in the traced weighted pallas conv"
+    pperms = [e for e in body.eqns if e.primitive.name == "ppermute"]
+    assert len(pperms) == 2, [e.params for e in pperms]
+    bot_pperm = max(pperms, key=lambda e: e.invars[0].aval.shape[1])
+    assert bot_pperm.invars[0].aval.shape[1] == 3  # the hi-row donation
+
+    tainted = set(bot_pperm.outvars)
+    kernel_seen = False
+    for eqn in body.eqns:
+        if eqn is bot_pperm:
+            continue
+        hit = any(hasattr(v, "count") and v in tainted for v in eqn.invars)
+        if _contains_pallas(eqn):
+            kernel_seen = True
+            assert not hit, "pallas_call consumes the bottom ppermute (no overlap)"
+        elif hit:
+            tainted.update(eqn.outvars)
+    assert kernel_seen, "no pallas_call in the traced weighted conv"
+    assert any(
+        hasattr(v, "count") and v in tainted for v in body.outvars
+    ), "bottom halo never reaches the output (fix-up conv missing)"
+
+    # numeric: the overlapped path stays lossless on the same geometry
+    # (height pads asymmetrically by the halo sizes: lo above, hi below)
+    want = conv2d(x, params, stride=s, padding=[(1, 3), (p, p)])
+    got = fn(x, params)[:, : heights[0] // s]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
 def test_spmd_halo_exchange_multidevice():
     """Run the shard_map halo-exchange suite on 8 forced host devices."""
     script = os.path.join(os.path.dirname(__file__), "spatial_multidev_impl.py")

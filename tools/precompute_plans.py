@@ -40,6 +40,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import (  # noqa: E402
     AGX_XAVIER,
+    SCHEMES,
     CollabTopology,
     Link,
     PlanStore,
@@ -70,6 +71,17 @@ def demo_topology() -> CollabTopology:
 
 def demo_config() -> ReplanConfig:
     return ReplanConfig(use_simulator=False, alpha=1.0, hysteresis=1, bucket_frac=0.5)
+
+
+def demo_scheme_config() -> ReplanConfig:
+    """The full-vocabulary twin of :func:`demo_config`: per-stage scheme
+    search needs the DES objective, and the vocabulary is part of the cache
+    fingerprint, so this lattice is disjoint from the halo-only one by
+    construction -- the two warm stores coexist in the same file."""
+    return ReplanConfig(
+        use_simulator=True, n_tasks=1, alpha=1.0, hysteresis=1,
+        bucket_frac=0.5, schemes=SCHEMES,
+    )
 
 
 def lattice_keys(
@@ -150,13 +162,20 @@ def main(argv: list[str] | None = None) -> dict:
     link_shifts = [-1, 0, 1] if args.smoke else args.link_shifts
     compute_shifts = [-2, -1, 0] if args.smoke else args.compute_shifts
     out = precompute(args.store, link_shifts, compute_shifts)
-    print(
-        f"{out['store']}: {out['lattice_points']} lattice points, "
-        f"{out['optimizer_calls']} optimised, {out['already_stored']} already "
-        f"stored, {out['store_entries']} entries total "
-        f"({out['elapsed_s']:.2f}s)"
+    # Scheme-vocabulary lattice: same link bands, nominal compute (scheme
+    # choice is most sensitive to the channel; the straggler axis is covered
+    # by the halo-only lattice above).  Idempotent like the base walk.
+    scheme = precompute(
+        args.store, link_shifts, [0], config=demo_scheme_config()
     )
-    return out
+    for label, o in (("halo lattice", out), ("scheme lattice", scheme)):
+        print(
+            f"{o['store']} [{label}]: {o['lattice_points']} lattice points, "
+            f"{o['optimizer_calls']} optimised, {o['already_stored']} already "
+            f"stored, {o['store_entries']} entries total "
+            f"({o['elapsed_s']:.2f}s)"
+        )
+    return {"base": out, "scheme": scheme}
 
 
 if __name__ == "__main__":
