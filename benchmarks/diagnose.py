@@ -4,7 +4,6 @@
 """
 import re
 import sys
-from collections import Counter
 from pathlib import Path
 
 import zstandard as zstd

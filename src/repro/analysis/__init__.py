@@ -1,0 +1,44 @@
+"""Static plan/DAG/kernel verification (no device, no execution).
+
+The paper's correctness guarantee -- receptive-field-aware partitioning keeps
+distributed inference bit-identical to local inference -- is enforced
+dynamically by the ``run_plan`` losslessness tests.  This package proves the
+same invariant surface *by analysis*, in milliseconds per plan:
+
+* :mod:`~repro.analysis.plan_check` -- row coverage, receptive-field
+  exactness, halo algebra/reach, message legality, auto-reduce monotonicity,
+  scheme-stage legality, head divisibility (pure integer arithmetic; no JAX);
+* :mod:`~repro.analysis.dag_check` -- acyclicity of dependency + resource-FIFO
+  edges (static deadlock detection), transfer endpoint locality, orphan
+  transfers, template-vs-scalar-builder duration audits;
+* :mod:`~repro.analysis.kernel_check` -- ``jax.eval_shape`` abstract
+  evaluation of the fused Pallas ``halo_conv2d`` path (support-predicate
+  agreement, output shapes, remainder tiles) before ``shard_map`` tracing;
+* :mod:`~repro.analysis.keying_lint` -- AST enforcement of the
+  config-fingerprint partition (every ``ReplanConfig`` field keys the plan
+  store or carries a justified exclusion) and ``PlanStore.get``'s row vetoes.
+
+Wired in as load-bearing infrastructure: ``PlanStore.get`` runs
+:func:`check_plan` on deserialized rows before serving them,
+``optimize_plan(verify=True)`` / ``run_plan(verify=True)`` gate on it, and
+``tools/check.py`` runs all four analyzers over the warm-store artifact and
+the benchmark configs in CI.  ``docs/analysis.md`` catalogues every invariant
+with its paper-equation or code-contract origin.
+"""
+from .dag_check import check_dag, check_template
+from .findings import AnalysisError, Finding, Report
+from .keying_lint import check_keying
+from .kernel_check import check_kernel_geometry, check_plan_kernels
+from .plan_check import check_plan
+
+__all__ = [
+    "AnalysisError",
+    "Finding",
+    "Report",
+    "check_dag",
+    "check_keying",
+    "check_kernel_geometry",
+    "check_plan",
+    "check_plan_kernels",
+    "check_template",
+]

@@ -1,0 +1,190 @@
+"""Abstract evaluation of the fused Pallas ``halo_conv2d`` path.
+
+``spatial.halo.conv2d_spatial(engine="pallas")`` routes a geometry to the
+fused kernel iff ``_pallas_supported`` says so; a divergence between that
+predicate and what ``halo_conv2d`` actually accepts surfaces as a cryptic
+trace-time error *inside* ``shard_map`` (where the failing shapes are per
+device and the geometry that chose the path is long gone).  This analyzer
+catches the divergence statically:
+
+* **Support agreement** (``kernel.support``): for a geometry, the predicate's
+  claim must match whether the kernel abstractly traces (``jax.eval_shape``
+  -- shape propagation only, no device execution, no data).  Both directions
+  are findings: claiming support for a geometry the kernel rejects breaks the
+  fused path at trace time; rejecting a geometry the kernel accepts silently
+  forfeits the fused path.
+* **Output shape** (``kernel.shape``): a traced kernel must produce exactly
+  ``[B, Hs // s, W_out, Cout]`` with ``W_out = (W + 2p - k) // s + 1`` --
+  the shard's contribution to eq. 7's row partition.
+* **Remainder tiles** (``kernel.tiles``): shard heights need not divide the
+  tile height; the final tile overhangs into zero padding.  The probe forces
+  a non-dividing ``tile_h`` and requires the same output shape -- pinning the
+  ceil-tiling contract (``nt = ceil(n_out / th)``) that once silently dropped
+  remainder rows.
+
+:func:`check_plan_kernels` walks a plan and probes every distinct conv
+geometry x shard height it would deploy, so unsupported shapes are caught
+before ``shard_map`` tracing.  JAX is imported lazily -- ``plan_check`` and
+the rest of the package stay importable without it.
+"""
+from __future__ import annotations
+
+from ..core.partition import HALPPlan, SchemePlan, SCHEME_HALO
+from .findings import Report
+
+__all__ = ["check_kernel_geometry", "check_plan_kernels"]
+
+
+def check_kernel_geometry(
+    k: int,
+    s: int = 1,
+    p: int = 0,
+    *,
+    groups: int = 1,
+    c_in: int = 8,
+    c_out: int = 8,
+    hs: int = 8,
+    w: int = 16,
+    batch: int = 1,
+    supported: bool | None = None,
+) -> Report:
+    """Verify predicate/kernel agreement for one geometry via ``eval_shape``.
+
+    ``supported`` overrides the ``_pallas_supported`` claim (mutation tests
+    use it to prove a wrong predicate is caught)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.halo_conv import halo_conv2d
+    from ..spatial.halo import _pallas_supported
+
+    rep = Report()
+    if hs % s:
+        raise ValueError(f"shard rows {hs} not divisible by stride {s} (caller contract)")
+    where = f"k={k} s={s} p={p} groups={groups} c={c_in}->{c_out} hs={hs} w={w}"
+
+    wts_shape = (k, k, 1 if groups > 1 else c_in, c_out)
+    wts = jax.ShapeDtypeStruct(wts_shape, jnp.float32)
+    claim = (
+        supported
+        if supported is not None
+        else _pallas_supported(k, s, p, groups, c_in, wts, w)
+    )
+
+    lo, hi = p, max(0, k - p - s)
+    x = jax.ShapeDtypeStruct((batch, hs, w, c_in), jnp.float32)
+    top = jax.ShapeDtypeStruct((batch, lo, w, c_in), jnp.float32) if lo else None
+    bot = jax.ShapeDtypeStruct((batch, hi, w, c_in), jnp.float32) if hi else None
+
+    def trace(tile_h=None):
+        return jax.eval_shape(
+            lambda xs, t, b, wt: halo_conv2d(
+                xs, t, b, wt, None, stride=s, padding=p, groups=groups, tile_h=tile_h
+            ),
+            x,
+            top,
+            bot,
+            wts,
+        )
+
+    rep.tick()
+    try:
+        out = trace()
+        traced, err = True, None
+    except Exception as exc:  # trace-time rejection, any flavour
+        traced, err = False, exc
+
+    if claim and not traced:
+        rep.add(
+            "kernel.support",
+            where,
+            f"_pallas_supported claims the fused kernel handles this geometry "
+            f"but halo_conv2d fails to trace: {type(err).__name__}: {err}",
+        )
+        return rep
+    if not claim and traced:
+        rep.add(
+            "kernel.support",
+            where,
+            "halo_conv2d traces this geometry but _pallas_supported rejects "
+            "it: the fused path is forfeited for a supported shape",
+        )
+    if not traced:
+        return rep
+
+    w_out = (w + 2 * p - k) // s + 1
+    expect = (batch, hs // s, w_out, c_out)
+    rep.tick()
+    if tuple(out.shape) != expect:
+        rep.add(
+            "kernel.shape",
+            where,
+            f"fused kernel output shape {tuple(out.shape)} != expected "
+            f"[B, Hs//s, W_out, Cout] = {expect}",
+        )
+        return rep
+
+    # remainder-tile path: force a tile height that does not divide n_out
+    n_out = hs // s
+    if n_out >= 2:
+        rep.tick()
+        try:
+            out_r = trace(tile_h=max(1, n_out - 1))
+        except Exception as exc:
+            rep.add(
+                "kernel.tiles",
+                where,
+                f"remainder-tile path (tile_h={max(1, n_out - 1)}, n_out="
+                f"{n_out}) fails to trace: {type(exc).__name__}: {exc}",
+            )
+            return rep
+        if tuple(out_r.shape) != expect:
+            rep.add(
+                "kernel.tiles",
+                where,
+                f"remainder-tile output shape {tuple(out_r.shape)} != {expect}: "
+                f"overhang rows are not sliced off",
+            )
+    return rep
+
+
+def _plan_geometries(plan: HALPPlan) -> set[tuple]:
+    """Distinct (k, s, p, groups, c_in, c_out, hs, w) the plan would deploy."""
+    geoms: set[tuple] = set()
+    sizes = plan.net.sizes()
+    for i, g in enumerate(plan.net.layers):
+        if g.kind not in ("conv", "depthwise"):
+            continue
+        groups = g.c_in if g.kind == "depthwise" else 1
+        width = sizes[i]  # square maps: input width == input rows
+        for slot in plan.es_names:
+            seg = plan.parts[i].out.get(slot)
+            if not seg:
+                continue
+            hs = seg.rows * g.s  # aligned shard: hs input rows per output row
+            geoms.add((g.k, g.s, g.p, groups, g.c_in, g.c_out, hs, width))
+    return geoms
+
+
+def check_plan_kernels(plan) -> Report:
+    """Probe every conv geometry x shard height a plan deploys.
+
+    A finding here means deploying the plan through the Pallas engine would
+    either crash at ``shard_map`` trace time (support divergence) or shard a
+    layer the kernel cannot express."""
+    rep = Report()
+    if isinstance(plan, SchemePlan):
+        for seg, sub in zip(plan.segments, plan.halo_plans):
+            if seg.scheme == SCHEME_HALO and sub is not None:
+                rep.extend(check_plan_kernels(sub))
+        return rep
+    if not isinstance(plan, HALPPlan):
+        rep.add("plan.type", type(plan).__name__, "not a HALPPlan / SchemePlan")
+        return rep
+    for k, s, p, groups, c_in, c_out, hs, w in sorted(_plan_geometries(plan)):
+        rep.extend(
+            check_kernel_geometry(
+                k, s, p, groups=groups, c_in=c_in, c_out=c_out, hs=hs, w=w
+            )
+        )
+    return rep

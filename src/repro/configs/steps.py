@@ -16,7 +16,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from ..models import convnext, dit, efficientnet, swin, transformer_lm as lm, unet, vit
+from ..models import dit, efficientnet, swin, transformer_lm as lm, unet, vit
 from ..optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 from .base import Arch, Cell
 

@@ -8,7 +8,6 @@ vision architectures -- without instantiating parameters.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Sequence
 
 from .rf import LayerGeom, attn, conv, pool, out_size
 

@@ -79,6 +79,14 @@ def equal_ratios(topology: CollabTopology) -> tuple[float, ...]:
     return tuple(1.0 / n for _ in range(n))
 
 
+def _verify_plan(plan, context: str) -> None:
+    """Opt-in static verification gate (``verify=True``): raises
+    :class:`repro.analysis.AnalysisError` naming every violated invariant."""
+    from ..analysis import check_plan
+
+    check_plan(plan).raise_if_failed(context)
+
+
 def evaluate_plan(
     net: ConvNetGeom,
     topology: CollabTopology,
@@ -146,6 +154,7 @@ def optimize_plan(
     eval_budget: int | None = None,
     tol: float = 0.0,
     schemes: Sequence[str] = (SCHEME_HALO,),
+    verify: bool = False,
 ) -> OptimizeResult:
     """Steepest coordinate-descent search for the fastest (ratios, overlap).
 
@@ -183,7 +192,12 @@ def optimize_plan(
     round, memoised by ``(ratios, overlap, assignment)`` and priced through
     the scheme DAG (:class:`~repro.core.events.SchemeBatchEvaluator`).  A
     custom ``objective`` is incompatible with the joint space (its signature
-    has no assignment argument) and raises ``ValueError`` there."""
+    has no assignment argument) and raises ``ValueError`` there.
+
+    ``verify=True`` runs the static verifier
+    (:func:`repro.analysis.check_plan`) on the winning plan before returning
+    and raises :class:`repro.analysis.AnalysisError` on any finding -- an
+    opt-in guard for callers that ship plans to remote executors."""
     if engine not in ("batched", "scalar"):
         raise ValueError(f"engine must be 'batched' or 'scalar', got {engine!r}")
     if eval_budget is not None and eval_budget < 1:
@@ -197,7 +211,7 @@ def optimize_plan(
                 "scheme DAG and cannot route them to an (ratios, overlap) "
                 "objective; drop `objective` or use schemes=(SCHEME_HALO,)"
             )
-        return _optimize_scheme_plan(
+        result = _optimize_scheme_plan(
             net,
             topology,
             schemes=schemes,
@@ -213,6 +227,9 @@ def optimize_plan(
             eval_budget=eval_budget,
             tol=tol,
         )
+        if verify:
+            _verify_plan(result.plan, "optimize_plan")
+        return result
     evals = 0
     history: list[tuple[tuple[float, ...], int, float]] = []
     batched = engine == "batched"
@@ -347,6 +364,8 @@ def optimize_plan(
     plan = plan_halp_topology(
         net, topology, overlap_rows=best_w, ratios=ratios, auto_reduce=auto_reduce
     )
+    if verify:
+        _verify_plan(plan, "optimize_plan")
     return OptimizeResult(
         ratios=ratios,
         overlap_rows=best_w,

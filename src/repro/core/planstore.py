@@ -52,11 +52,14 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import math
 import pickle
 import sqlite3
 import time
 from pathlib import Path
+
+_log = logging.getLogger(__name__)
 
 __all__ = ["PLAN_SCHEMA_VERSION", "canonical_key", "key_hash", "PlanStore"]
 
@@ -145,17 +148,23 @@ class PlanStore:
         self.misses = 0
         self.stale = 0
         self.writes = 0
+        self.invalid = 0
 
     # -- mapping ----------------------------------------------------------
 
     def get(self, key):
         """The stored result for ``key``, unpickled, or None.  Returns None
         (a miss) for absent keys, hash collisions (canonical texts compared),
-        and rows written under a different schema version."""
+        rows written under a different schema version, and rows whose payload
+        fails to deserialize or whose plan fails static verification
+        (:func:`repro.analysis.check_plan`) -- those rows are deleted and
+        counted in ``invalid``, so a corrupted store degrades to cache misses
+        instead of serving broken plans or raising into the controller."""
         canon = canonical_key(key)
+        khash = key_hash(key)
         row = self._conn.execute(
             "SELECT key_text, schema_version, payload FROM plans WHERE key_hash = ?",
-            (key_hash(key),),
+            (khash,),
         ).fetchone()
         if row is None or row[0] != canon:
             self.misses += 1
@@ -164,8 +173,58 @@ class PlanStore:
             self.stale += 1
             self.misses += 1
             return None
+        try:
+            result = pickle.loads(row[2])
+        except Exception as exc:
+            self._invalidate_row(khash, f"payload failed to deserialize: {exc!r}")
+            return None
+        detail = self._verify_payload(result)
+        if detail is not None:
+            self._invalidate_row(khash, detail)
+            return None
         self.hits += 1
-        return pickle.loads(row[2])
+        return result
+
+    def _verify_payload(self, result) -> str | None:
+        """Static-verification detail for a deserialized payload, or None if
+        it is servable.  Only objects that carry plans (``.plan`` / ``.plans``)
+        are checked; anything else passes through untouched.  A *crash* in the
+        checker itself is logged and the payload served -- an analyzer bug
+        must not take down serving."""
+        plans = getattr(result, "plans", None)
+        if plans is None:  # PlacementResult nests them one level down
+            plans = getattr(getattr(result, "placement", None), "plans", None)
+        if plans is None:
+            plan = getattr(result, "plan", None)
+            plans = () if plan is None else (plan,)
+        if not plans:
+            return None
+        try:
+            from ..analysis import check_plan
+        except Exception:  # pragma: no cover - analysis package missing
+            return None
+        for plan in plans:
+            try:
+                rep = check_plan(plan)
+            except Exception:
+                _log.warning(
+                    "plan-store verifier crashed on a stored payload; "
+                    "serving the row unverified", exc_info=True
+                )
+                return None
+            if not rep.ok:
+                return "stored plan failed verification: " + "; ".join(
+                    str(f) for f in rep.findings[:3]
+                )
+        return None
+
+    def _invalidate_row(self, khash: str, detail: str) -> None:
+        """Drop one corrupt/invalid row and count the read as a miss."""
+        _log.warning("plan store row invalidated (%s)", detail)
+        self._conn.execute("DELETE FROM plans WHERE key_hash = ?", (khash,))
+        self._conn.commit()
+        self.invalid += 1
+        self.misses += 1
 
     def put(self, key, result, provenance: dict | None = None, kind: str | None = None) -> None:
         """Persist one optimised result under ``key`` (last-writer-wins --
@@ -233,6 +292,7 @@ class PlanStore:
             misses=self.misses,
             stale=self.stale,
             writes=self.writes,
+            invalid=self.invalid,
             path=self.path,
         )
 

@@ -90,6 +90,7 @@ from .schedule import halp_closed_form
 from .topology import CollabTopology, Link
 
 __all__ = [
+    "FINGERPRINT_EXCLUDED",
     "LinkRateEstimator",
     "ComputeRateEstimator",
     "PlanCache",
@@ -347,6 +348,28 @@ class PlanCache:
         """All cached results, least- to most-recently used (e.g. for
         verifying every plan a controller ever served stays lossless)."""
         return list(self._entries.values())
+
+
+# Every ReplanConfig field is either folded into ReplanController._fingerprint
+# (it changes which plan a cache/store key maps to) or named here with the
+# reason it may NOT key.  The partition is machine-checked by
+# repro.analysis.keying_lint: adding a config field without fingerprinting it
+# or justifying its exclusion is a CI failure -- the silent-stale-plan bug
+# class (two controllers differing in an unkeyed knob sharing wrong store
+# entries) cannot land unnoticed.
+FINGERPRINT_EXCLUDED: dict[str, str] = {
+    "engine": "batched and scalar candidate pricing return bit-identical "
+    "plans (pinned in tests/test_conformance.py), so both engines share one "
+    "cache entry by design",
+    "adapt_compute": "gates whether bucket keys *move* under compute drift, "
+    "never what plan a given key maps to; frozen and adaptive controllers "
+    "share entries by design",
+    "alpha": "estimator-side EWMA smoothing: it changes when a band boundary "
+    "is crossed, not the plan either band maps to (bands key via the bucket "
+    "part of the cache key)",
+    "hysteresis": "adoption timing only: how many epochs a drift must persist "
+    "before the active key switches; the key->plan mapping is untouched",
+}
 
 
 @dataclass(frozen=True)

@@ -28,7 +28,7 @@ from typing import Sequence
 
 from .events import final_bytes, init_bytes, resolve_halp_setup, sec_step, zone_step
 from .nets import ConvNetGeom, vgg16_geom
-from .partition import E0, E1, E2, HALPPlan, plan_even
+from .partition import HALPPlan, plan_even
 from .topology import CollabTopology, Link, Platform
 
 __all__ = [

@@ -65,6 +65,11 @@ def halo_conv2d(
 
     x = wpad(x_shard)
     w_ext = x.shape[2]
+    if w_ext < k:
+        raise ValueError(
+            f"non-positive output width: padded width {w_ext} (w={w} + 2*p="
+            f"{2 * padding}) < kernel {k}; the map is too narrow to convolve"
+        )
     th = tile_h or _pick_tile_h(n_out, w_ext, cin, cout, k, x.dtype.itemsize, s)
     th = max(1, min(th, n_out))
     nt = -(-n_out // th)  # ceil: the last tile may overhang into zero padding

@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the halo conv: concat-then-conv."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from ..conv2d.ref import conv2d_ref

@@ -4,7 +4,6 @@ fault-tolerant trainer."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

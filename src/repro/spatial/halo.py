@@ -41,7 +41,6 @@ split exactly.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -276,10 +275,19 @@ def _conv_valid(x, p, s, groups=1):
     return y
 
 
-def _pallas_supported(k: int, s: int, p: int, groups: int, c: int, wts) -> bool:
-    """Geometries the fused kernel expresses: exact halos (p <= k - s) and
-    groups either trivial or depthwise."""
+def _pallas_supported(
+    k: int, s: int, p: int, groups: int, c: int, wts, w: int | None = None
+) -> bool:
+    """The single source of truth for fused-path eligibility: geometries the
+    fused kernel expresses are exact halos (p <= k - s), groups either trivial
+    or depthwise, and -- given the shard width ``w`` -- a positive output
+    width (``w + 2p >= k``; narrower maps make ``(w + 2p - k) // s + 1 <= 0``
+    and the kernel's reshape blows up mid-trace).  Agreement with what
+    ``halo_conv2d`` actually traces is pinned by
+    ``repro.analysis.kernel_check``."""
     if k - p - s < 0:
+        return False
+    if w is not None and w + 2 * p < k:
         return False
     return groups == 1 or (groups == c == wts.shape[-1] and wts.shape[2] == 1)
 
@@ -321,7 +329,7 @@ def conv2d_spatial(
         raise ValueError(f"shard rows {hs} not divisible by stride {s}")
     lo, hi = halo_sizes(k, s, p)
 
-    if engine == "pallas" and _pallas_supported(k, s, p, groups, c, params["w"]):
+    if engine == "pallas" and _pallas_supported(k, s, p, groups, c, params["w"], w):
         # --- fused path: ppermute halos, then ONE kernel whose boundary tiles
         # are the only consumers of the remote rows (eqs. 9-15 fused).
         _check_halo_fits(hs, lo, hi)
@@ -406,7 +414,7 @@ def _conv2d_spatial_weighted(
     # both engines can overlap them with interior compute
     top, bot = _issue_halos_weighted(x, lo, hi, heights, hs_j, axis_name)
 
-    if engine == "pallas" and _pallas_supported(k, s, p, groups, c, wts):
+    if engine == "pallas" and _pallas_supported(k, s, p, groups, c, wts, w):
         pad_rows = hi + (-(hmax + hi)) % s
         x_ext = (
             jnp.concatenate([x, jnp.zeros((b, pad_rows, w, c), x.dtype)], axis=1)

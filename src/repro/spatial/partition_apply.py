@@ -40,7 +40,6 @@ from ..core.partition import (
     Segment,
     _split_counts,
 )
-from ..core.rf import input_range_exact
 
 __all__ = ["run_plan", "segment_forward"]
 
@@ -77,6 +76,7 @@ def run_plan(
     apply_layer,
     x: jax.Array,
     time_observer: Callable[[str, float, float], None] | None = None,
+    verify: bool = False,
 ) -> jax.Array:
     """Run the full plan; returns the merged final feature map (host side).
 
@@ -97,7 +97,17 @@ def run_plan(
     ``plan`` may also be a :class:`~repro.core.partition.SchemePlan`: each
     segment then executes under its own scheme (halo segments recurse through
     this very function on their sub-plan) and the observer receives samples
-    attributed to physical ES names across all segments."""
+    attributed to physical ES names across all segments.
+
+    ``verify=True`` statically verifies the plan
+    (:func:`repro.analysis.check_plan` -- coverage, receptive-field halos,
+    message legality) before touching any array, raising
+    :class:`repro.analysis.AnalysisError` instead of producing a silently
+    wrong feature map from a corrupted plan."""
+    if verify:
+        from ..analysis import check_plan
+
+        check_plan(plan).raise_if_failed("run_plan")
     if isinstance(plan, SchemePlan):
         return _run_scheme_plan(plan, layer_params, apply_layer, x, time_observer)
     net: ConvNetGeom = plan.net

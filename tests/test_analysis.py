@@ -1,0 +1,601 @@
+"""Static analyzer conformance: valid artifacts pass, seeded corruptions are
+caught with precise diagnostics.
+
+Every mutation test corrupts a *valid* plan/DAG/template/config in one
+targeted way and asserts the analyzer reports the matching check id naming
+the corrupted site (layer, slot, stage, job, resource, config field) -- the
+"teeth" contract of ``repro.analysis``.  Positive tests pin that the real
+committed artifacts (builder-produced plans, builder-laid DAGs, the live
+``ReplanConfig`` fingerprint partition) are finding-free, so CI failures from
+``tools/check.py`` are always real regressions.
+"""
+import dataclasses
+import inspect
+import pickle
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))  # tools/ is a plain directory, not a package
+
+from repro.analysis import (
+    AnalysisError,
+    check_dag,
+    check_keying,
+    check_kernel_geometry,
+    check_plan,
+    check_plan_kernels,
+    check_template,
+)
+from repro.analysis import plan_check as plan_check_module
+from repro.core.events import DagTemplate, _layout_quantities, build_halp_dag
+from repro.core.nets import vgg16_geom, vit_l16_geom
+from repro.core.optimizer import optimize_plan
+from repro.core.partition import (
+    EMPTY,
+    HALPPlan,
+    Segment,
+    plan_even,
+    plan_halp_topology,
+    plan_layout,
+    plan_scheme,
+)
+from repro.core.planstore import PlanStore
+from repro.core.simulator import Sim
+from tools.precompute_plans import demo_net, demo_topology
+
+
+# ---------------------------------------------------------------------------
+# fixtures / mutation helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def net():
+    return demo_net()
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return demo_topology()
+
+
+@pytest.fixture(scope="module")
+def halp_plan(net, topo):
+    return plan_halp_topology(net, topo)
+
+
+@pytest.fixture(scope="module")
+def scheme_plan(net, topo):
+    return plan_scheme(net, topo)
+
+
+@pytest.fixture(scope="module")
+def vit_net():
+    return vit_l16_geom(in_rows=64, n_blocks=2, d=64, heads=4, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def vit_plan(vit_net, topo):
+    return plan_scheme(vit_net, topo)
+
+
+def mutate_part(plan: HALPPlan, layer: int, slot: str, out=None, inp=None) -> HALPPlan:
+    """One-slot surgical mutation of a (frozen) HALPPlan."""
+    part = plan.parts[layer]
+    new_out, new_inp = dict(part.out), dict(part.inp)
+    if out is not None:
+        new_out[slot] = out
+    if inp is not None:
+        new_inp[slot] = inp
+    bad = dataclasses.replace(part, out=new_out, inp=new_inp)
+    parts = plan.parts[:layer] + (bad,) + plan.parts[layer + 1 :]
+    return dataclasses.replace(plan, parts=parts)
+
+
+def findings_of(rep, check: str):
+    return [f for f in rep.findings if f.check == check]
+
+
+# ---------------------------------------------------------------------------
+# positive: committed artifacts are finding-free
+# ---------------------------------------------------------------------------
+
+
+def test_valid_plans_pass(halp_plan, scheme_plan, vit_plan, net, topo):
+    for plan in (halp_plan, scheme_plan, vit_plan, plan_even(net, 3)):
+        rep = check_plan(plan)
+        assert rep.ok, str(rep)
+        assert rep.checks > 0
+    lay = plan_layout(net, topo.secondaries, host=topo.host)
+    assert check_plan(lay).ok  # layouts are materialised then checked
+
+
+def test_valid_dag_and_template_pass(net, topo, halp_plan):
+    sim = Sim()
+    build_halp_dag(sim, [halp_plan], topo)
+    rep = check_dag(sim)
+    assert rep.ok, str(rep)
+    lay = plan_layout(net, topo.secondaries, host=topo.host)
+    tmpl = DagTemplate.from_layouts([lay], topo, physical=False)
+    rep = check_template(tmpl, _layout_quantities([lay]), topo)
+    assert rep.ok, str(rep)
+
+
+def test_live_keying_partition_is_clean():
+    rep = check_keying()
+    assert rep.ok, str(rep)
+
+
+# ---------------------------------------------------------------------------
+# plan corruptions
+# ---------------------------------------------------------------------------
+
+
+def test_row_gap_caught(halp_plan):
+    slot = next(s for s in halp_plan.es_names if halp_plan.parts[0].out[s])
+    seg = halp_plan.parts[0].out[slot]
+    bad = mutate_part(halp_plan, 0, slot, out=Segment(seg.lo + 1, seg.hi))
+    rep = check_plan(bad)
+    gaps = findings_of(rep, "plan.coverage")
+    assert gaps and "gap" in gaps[0].detail
+    assert "layer 0" in gaps[0].where
+
+
+def test_row_overlap_caught(halp_plan):
+    owners = [s for s in halp_plan.es_names if halp_plan.parts[0].out[s]]
+    assert len(owners) >= 2
+    slot = owners[1]
+    seg = halp_plan.parts[0].out[slot]
+    bad = mutate_part(halp_plan, 0, slot, out=Segment(seg.lo - 1, seg.hi))
+    rep = check_plan(bad)
+    hits = [f for f in findings_of(rep, "plan.coverage") if "overlap" in f.detail]
+    assert hits and slot in hits[0].where
+
+
+def test_tail_gap_caught(halp_plan):
+    owners = [s for s in halp_plan.es_names if halp_plan.parts[0].out[s]]
+    slot = owners[-1]
+    seg = halp_plan.parts[0].out[slot]
+    bad = mutate_part(halp_plan, 0, slot, out=Segment(seg.lo, seg.hi - 1))
+    rep = check_plan(bad)
+    assert any("gap at tail" in f.detail for f in findings_of(rep, "plan.coverage"))
+
+
+def test_short_halo_caught(halp_plan):
+    slot = next(s for s in halp_plan.es_names if halp_plan.parts[0].out[s])
+    inp = halp_plan.parts[0].inp[slot]
+    bad = mutate_part(halp_plan, 0, slot, inp=Segment(inp.lo + 1, inp.hi))
+    rep = check_plan(bad)
+    hits = [f for f in findings_of(rep, "plan.rf") if "short halo" in f.detail]
+    assert hits and slot in hits[0].where
+
+
+def test_surplus_input_caught(halp_plan):
+    # pick a slot whose exact input range starts past row 1, widen it
+    layer, slot = next(
+        (i, s)
+        for i in range(len(halp_plan.parts))
+        for s in halp_plan.es_names
+        if halp_plan.parts[i].out.get(s) and halp_plan.parts[i].inp[s].lo > 1
+    )
+    inp = halp_plan.parts[layer].inp[slot]
+    bad = mutate_part(halp_plan, layer, slot, inp=Segment(inp.lo - 1, inp.hi))
+    rep = check_plan(bad)
+    assert any("surplus input" in f.detail for f in findings_of(rep, "plan.rf"))
+
+
+def test_idle_slot_with_input_caught(halp_plan):
+    slot = next(s for s in halp_plan.es_names if halp_plan.parts[0].out[s])
+    bad = mutate_part(halp_plan, 0, slot, out=EMPTY)
+    rep = check_plan(bad)
+    assert any("unpriced transfer" in f.detail for f in findings_of(rep, "plan.rf"))
+
+
+def test_auto_reduce_reactivation_caught(halp_plan):
+    assert halp_plan.slot_owner, "demo plan should be hosted"
+    sec = halp_plan.secondary_slots[-1]
+    conv_layers = [
+        i
+        for i, g in enumerate(halp_plan.net.layers)
+        if g.kind != "pool" and halp_plan.parts[i].out[sec]
+    ]
+    layer = conv_layers[0]
+    assert any(
+        i > layer for i in conv_layers
+    ), "need a later conv layer where the secondary is active again"
+    bad = mutate_part(halp_plan, layer, sec, out=EMPTY, inp=EMPTY)
+    rep = check_plan(bad)
+    hits = findings_of(rep, "plan.reduce")
+    assert hits and sec in hits[0].where and "re-activated" in hits[0].detail
+
+
+def test_attention_row_split_caught(vit_net, topo, halp_plan):
+    # graft an attention layer into a row-partitioned HALP plan: layer 1 of
+    # the demo plan becomes attn while >1 slot owns its rows
+    net = halp_plan.net
+    g = net.layers[1]
+    attn_g = dataclasses.replace(g, kind="attn", heads=1)
+    bad_net = dataclasses.replace(
+        net, layers=net.layers[:1] + (attn_g,) + net.layers[2:]
+    )
+    bad = dataclasses.replace(halp_plan, net=bad_net)
+    rep = check_plan(bad)
+    hits = findings_of(rep, "plan.scheme")
+    assert hits and "no receptive-field row split exists" in hits[0].detail
+
+
+def test_illegal_scheme_for_stage_caught(vit_plan, vit_net):
+    # assign non_penetrative to a stage containing attention layers
+    attn_stage = next(
+        idx
+        for idx, (a, b) in enumerate(vit_plan.spans)
+        if any(g.kind == "attn" for g in vit_net.layers[a : b + 1])
+    )
+    assignment = list(vit_plan.assignment)
+    assignment[attn_stage] = "non_penetrative"
+    bad = dataclasses.replace(vit_plan, assignment=tuple(assignment))
+    rep = check_plan(bad)
+    hits = [f for f in findings_of(rep, "plan.scheme") if "illegal" in f.detail]
+    assert hits and f"stage {attn_stage}" in hits[0].where
+
+
+def test_spans_mismatch_caught(scheme_plan):
+    bad = dataclasses.replace(scheme_plan, spans=scheme_plan.spans[:-1])
+    rep = check_plan(bad)
+    hits = [f for f in findings_of(rep, "plan.scheme") if f.where == "stage spans"]
+    assert hits
+
+
+def test_head_divisibility_caught(vit_plan):
+    # d=64 heads=4 is valid; heads=3 does not divide 64
+    net = vit_plan.net
+    layers = tuple(
+        dataclasses.replace(g, heads=3) if g.kind == "attn" else g
+        for g in net.layers
+    )
+    bad = dataclasses.replace(vit_plan, net=dataclasses.replace(net, layers=layers))
+    rep = check_plan(bad)
+    hits = findings_of(rep, "plan.heads")
+    assert hits and "not divisible by heads=3" in hits[0].detail
+
+
+def test_secondary_exchange_caught(halp_plan):
+    # a secondary's input reaching past both neighbours into a far shard:
+    # widen a later-layer input beyond what adjacency can donate
+    plan = halp_plan
+    sizes = plan.net.sizes()
+    layer = next(
+        i
+        for i in range(1, len(plan.parts))
+        if plan.net.layers[i - 1].kind != "attn"
+        and plan.net.layers[i].kind != "attn"
+        and plan.parts[i].out.get(plan.es_names[0])
+    )
+    slot = plan.es_names[0]
+    bad = mutate_part(plan, layer, slot, inp=Segment(1, sizes[layer]))
+    rep = check_plan(bad)
+    # the widened input is simultaneously a surplus-rf and an illegal-message
+    # finding; the message-legality one must name the boundary
+    assert findings_of(rep, "plan.halo") or findings_of(rep, "plan.rf")
+    assert not rep.ok
+
+
+# ---------------------------------------------------------------------------
+# DAG corruptions
+# ---------------------------------------------------------------------------
+
+
+def _demo_sim(halp_plan, topo):
+    sim = Sim()
+    build_halp_dag(sim, [halp_plan], topo)
+    return sim
+
+
+def test_fifo_cycle_caught(halp_plan, topo):
+    sim = _demo_sim(halp_plan, topo)
+    # same-resource pair (a, b) with a earlier: forward dep a -> b plus the
+    # FIFO edge a -> b's predecessor chain forms a cycle
+    by_res = {}
+    pair = None
+    for job in sim.jobs:
+        if job.resource in by_res:
+            pair = (by_res[job.resource], job.jid)
+            break
+        by_res[job.resource] = job.jid
+    assert pair is not None
+    a, b = pair
+    sim.jobs[a].deps = sim.jobs[a].deps + (b,)
+    rep = check_dag(sim)
+    assert findings_of(rep, "dag.event-order"), "forward dep must be reported"
+    hits = findings_of(rep, "dag.deadlock")
+    assert hits and "cycle" in hits[0].detail
+
+
+def test_orphan_transfer_caught(halp_plan, topo):
+    sim = _demo_sim(halp_plan, topo)
+    last_cmp = max(
+        j.jid for j in sim.jobs if not j.resource.startswith("link:")
+    )
+    src = sim.jobs[last_cmp].resource
+    sim.add("stray[0]", f"link:{src}->nowhere", 0.5, deps=[last_cmp])
+    rep = check_dag(sim)
+    hits = findings_of(rep, "dag.orphan")
+    assert hits and "stray[0]" in hits[0].where and "never used" in hits[0].detail
+
+
+def test_last_layer_double_priced_sends_are_exempt(halp_plan, topo):
+    # the seed convention: unconsumed msg[...] before a final[...] on the same
+    # link is NOT an orphan (events.sec_step last-layer sends)
+    sim = _demo_sim(halp_plan, topo)
+    rep = check_dag(sim)
+    assert not findings_of(rep, "dag.orphan")
+    unconsumed_msgs = [
+        j
+        for j in sim.jobs
+        if j.name.startswith("msg[")
+        and j.duration > 0
+        and not any(j.jid in other.deps for other in sim.jobs)
+    ]
+    assert unconsumed_msgs, "demo DAG should exercise the exemption"
+
+
+def test_transfer_endpoint_mismatch_caught(halp_plan, topo):
+    sim = _demo_sim(halp_plan, topo)
+    msg = next(j for j in sim.jobs if j.resource.startswith("link:") and j.deps)
+    src, dst = msg.resource[5:].split("->", 1)
+    msg.resource = f"link:elsewhere->{dst}"
+    rep = check_dag(sim)
+    hits = findings_of(rep, "dag.transfer")
+    assert hits and "would not exist at departure" in hits[0].detail
+
+
+def test_template_duration_corruption_caught(net, topo):
+    lay = plan_layout(net, topo.secondaries, host=topo.host)
+    tmpl = DagTemplate.from_layouts([lay], topo, physical=False)
+    q = _layout_quantities([lay])
+    target = next(j for j, job in enumerate(tmpl.sim.jobs) if job.duration > 0)
+    tmpl.nums[target] *= 2.0
+    rep = check_template(tmpl, q, topo)
+    hits = findings_of(rep, "dag.template")
+    assert hits and tmpl.sim.jobs[target].name in hits[0].where
+
+
+# ---------------------------------------------------------------------------
+# kernel geometry
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_support_divergence_caught():
+    # force a wrong predicate claim: w=3 < k=5 cannot produce output columns
+    rep = check_kernel_geometry(5, 1, 0, w=3, supported=True)
+    hits = findings_of(rep, "kernel.support")
+    assert hits and "fails to trace" in hits[0].detail
+
+
+def test_kernel_forfeited_support_caught():
+    rep = check_kernel_geometry(3, 1, 1, w=16, supported=False)
+    hits = findings_of(rep, "kernel.support")
+    assert hits and "forfeited" in hits[0].detail
+
+
+def test_narrow_width_geometries_rejected_by_predicate():
+    # regression pin for the _pallas_supported / halo_conv2d divergence: the
+    # predicate now agrees with the kernel on non-positive output widths
+    for k, s, p, w in ((5, 1, 0, 3), (4, 2, 0, 3)):
+        rep = check_kernel_geometry(k, s, p, w=w, hs=4)
+        assert rep.ok, str(rep)
+
+
+def test_halo_conv2d_narrow_width_error_is_crisp():
+    import jax.numpy as jnp
+
+    from repro.kernels.halo_conv import halo_conv2d
+
+    x = jnp.zeros((1, 4, 3, 8))
+    top = None
+    bot = jnp.zeros((1, 4, 3, 8))
+    wts = jnp.zeros((5, 5, 8, 8))
+    with pytest.raises(ValueError, match="non-positive output width"):
+        halo_conv2d(x, top, bot, wts, stride=1, padding=0)
+
+
+def test_plan_kernels_pass_on_demo(halp_plan):
+    rep = check_plan_kernels(halp_plan)
+    assert rep.ok, str(rep)
+    assert rep.checks > 0
+
+
+# ---------------------------------------------------------------------------
+# keying lint corruptions (synthetic sources: check_keying takes source text)
+# ---------------------------------------------------------------------------
+
+GOOD_STORE_SRC = """
+class PlanStore:
+    def get(self, key):
+        canon = canonical_key(key)
+        if row[1] != self.schema_version:
+            return None
+        return row
+"""
+
+
+def _replan_src(fields, keyed, excluded):
+    field_lines = "\n".join(f"    {f}: int = 0" for f in fields)
+    excl = ",\n".join(f"    {f!r}: {why!r}" for f, why in excluded.items())
+    reads = ", ".join(f"config.{f}" for f in keyed)
+    return f"""
+FINGERPRINT_EXCLUDED = {{
+{excl}
+}}
+
+class ReplanConfig:
+{field_lines}
+
+class ReplanController:
+    def __init__(self, config):
+        self._fingerprint = ({reads},)
+"""
+
+
+def test_unkeyed_field_caught():
+    src = _replan_src(
+        ["alpha", "new_knob"], ["alpha"], {}
+    )  # new_knob neither keyed nor excluded
+    rep = check_keying(src, GOOD_STORE_SRC)
+    hits = findings_of(rep, "keying.unkeyed")
+    assert hits and "ReplanConfig.new_knob" == hits[0].where
+    assert "silently share stale plan-store entries" in hits[0].detail
+
+
+def test_stale_exclusion_caught():
+    src = _replan_src(["alpha"], ["alpha"], {"gone": "this field was removed long ago"})
+    rep = check_keying(src, GOOD_STORE_SRC)
+    hits = findings_of(rep, "keying.stale-exclusion")
+    assert hits and "'gone'" in hits[0].where
+
+
+def test_missing_justification_caught():
+    src = _replan_src(["alpha", "beta"], ["alpha"], {"beta": "perf"})
+    rep = check_keying(src, GOOD_STORE_SRC)
+    hits = findings_of(rep, "keying.no-justification")
+    assert hits and "'beta'" in hits[0].where
+
+
+def test_contradiction_caught():
+    src = _replan_src(
+        ["alpha"], ["alpha"], {"alpha": "excluded for a very well argued reason"}
+    )
+    rep = check_keying(src, GOOD_STORE_SRC)
+    assert findings_of(rep, "keying.contradiction")
+
+
+def test_store_veto_removal_caught():
+    src = _replan_src(["alpha"], ["alpha"], {})
+    bad_store = """
+class PlanStore:
+    def get(self, key):
+        return pickle.loads(row[2])
+"""
+    rep = check_keying(src, bad_store)
+    hits = findings_of(rep, "keying.store-veto")
+    details = " ".join(f.detail for f in hits)
+    assert "hash collision" in details and "schema" in details
+
+
+# ---------------------------------------------------------------------------
+# plan-store wiring: corrupt rows degrade to misses, never serve
+# ---------------------------------------------------------------------------
+
+
+def test_store_garbage_payload_invalidated(tmp_path, net, topo):
+    store = PlanStore(tmp_path / "s.sqlite")
+    key = (("plan", "k"), (0,))
+    store.put(key, optimize_plan(net, topo, max_rounds=1))
+    assert store.get(key) is not None
+    store._conn.execute("UPDATE plans SET payload = ?", (b"\x80garbage",))
+    store._conn.commit()
+    assert store.get(key) is None
+    assert store.invalid == 1 and store.misses == 1
+    assert len(store) == 0, "the corrupt row must be deleted"
+
+
+def test_store_corrupt_plan_invalidated(tmp_path, net, topo):
+    store = PlanStore(tmp_path / "s.sqlite")
+    key = (("plan", "k"), (0,))
+    res = optimize_plan(net, topo, max_rounds=1)
+    store.put(key, res)
+    plan = res.plan
+    slot = next(s for s in plan.es_names if plan.parts[0].out[s])
+    seg = plan.parts[0].out[slot]
+    bad = dataclasses.replace(
+        res, plan=mutate_part(plan, 0, slot, out=Segment(seg.lo + 1, seg.hi))
+    )
+    store._conn.execute("UPDATE plans SET payload = ?", (pickle.dumps(bad),))
+    store._conn.commit()
+    assert store.get(key) is None
+    assert store.invalid == 1
+    assert len(store) == 0
+    assert store.stats()["invalid"] == 1
+
+
+def test_store_non_plan_payloads_pass_through(tmp_path):
+    store = PlanStore(tmp_path / "s.sqlite")
+    store.put((("plan", "k"), (0,)), "just-a-string")
+    assert store.get((("plan", "k"), (0,))) == "just-a-string"
+    assert store.hits == 1 and store.invalid == 0
+
+
+# ---------------------------------------------------------------------------
+# verify= gates
+# ---------------------------------------------------------------------------
+
+
+def test_optimize_plan_verify_passes(net, topo):
+    res = optimize_plan(net, topo, max_rounds=1, verify=True)
+    assert check_plan(res.plan).ok
+
+
+def test_run_plan_verify_rejects_corrupt_plan(halp_plan):
+    import jax.numpy as jnp
+
+    from repro.spatial.partition_apply import run_plan
+
+    slot = next(s for s in halp_plan.es_names if halp_plan.parts[0].out[s])
+    seg = halp_plan.parts[0].out[slot]
+    bad = mutate_part(halp_plan, 0, slot, out=Segment(seg.lo + 1, seg.hi))
+    x = jnp.zeros((1, bad.net.in_rows, bad.net.in_rows, bad.net.in_channels))
+    with pytest.raises(AnalysisError) as exc:
+        run_plan(bad, [None] * len(bad.net.layers), None, x, verify=True)
+    assert "plan.coverage" in str(exc.value)
+
+
+# ---------------------------------------------------------------------------
+# performance / purity contracts
+# ---------------------------------------------------------------------------
+
+
+def test_plan_check_is_fast_on_full_vgg16(topo):
+    plan = plan_scheme(vgg16_geom(), topo)
+    times = []
+    for _ in range(2):
+        t0 = time.perf_counter()
+        rep = check_plan(plan)
+        times.append(time.perf_counter() - t0)
+    assert rep.ok, str(rep)
+    assert min(times) < 0.05, f"plan_check took {min(times) * 1e3:.1f} ms"
+
+
+def test_plan_check_never_imports_jax():
+    src = inspect.getsource(plan_check_module)
+    assert "import jax" not in src
+
+
+def test_check_cli_exit_codes(tmp_path):
+    env = dict(PYTHONPATH=str(REPO / "src"), PATH="/usr/bin:/bin:/usr/local/bin")
+    ok = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check.py")],
+        capture_output=True, text=True, env=env,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    # a store with one undeserializable row must fail the CLI
+    store = PlanStore(tmp_path / "bad.sqlite")
+    store.put((("plan", "k"), (0,)), "placeholder")
+    store._conn.execute("UPDATE plans SET payload = ?", (b"\x80garbage",))
+    store._conn.commit()
+    store.close()
+    bad = subprocess.run(
+        [
+            sys.executable,
+            str(REPO / "tools" / "check.py"),
+            "--store",
+            str(tmp_path / "bad.sqlite"),
+        ],
+        capture_output=True, text=True, env=env,
+    )
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "store.payload" in bad.stdout

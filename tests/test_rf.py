@@ -1,7 +1,5 @@
 """Receptive-field arithmetic tests (paper §II, eqs. 1-4, 8-9)."""
 import numpy as np
-import pytest
-from fractions import Fraction
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # container image without hypothesis: deterministic shim

@@ -1,5 +1,4 @@
 """Scheduler / simulator tests: closed form vs. event sim vs. paper anchors."""
-import math
 
 import pytest
 
